@@ -1,0 +1,57 @@
+"""Ablations beyond the paper: block-momentum flavours.
+
+* heavy-ball (the paper's Algorithm 1)
+* Nesterov block momentum (lookahead at the meta level)
+* learner-level MSGD under block momentum (the paper's §V note)
+* meta_lr (eta) scaling of the displacement
+
+All at the same (P, K, B, samples).
+"""
+from __future__ import annotations
+
+from benchmarks.common import run_mlp, samples_to_target
+from repro.configs.base import MAvgConfig
+from repro.core.meta import init_state, make_meta_step
+from repro.data import classif_batch_fn, classif_eval_set
+from repro.models.simple import mlp_accuracy, mlp_init, mlp_loss
+
+import jax
+
+
+def run_cfg(tag, steps=60, **kw):
+    cfg = MAvgConfig(algorithm=kw.pop("algorithm", "mavg"), num_learners=4,
+                     k_steps=4, learner_lr=0.15, **kw)
+    params = mlp_init(jax.random.PRNGKey(0), 32, 64, 10)
+    state = init_state(params, cfg)
+    step = jax.jit(make_meta_step(mlp_loss, cfg))
+    bf = classif_batch_fn(32, 10, 4, 4, 8)
+    losses = []
+    for i in range(steps):
+        b = bf(jax.random.fold_in(jax.random.PRNGKey(1), i), i)
+        state, m = step(state, b)
+        losses.append(float(m["loss"]))
+    acc = float(mlp_accuracy(state.global_params, classif_eval_set(32, 10)))
+    stt = samples_to_target(losses, 1.1, 4, 4, 8)
+    print(f"ablations,{tag},final_loss={losses[-1]:.4f},val_acc={acc:.4f},"
+          f"samples_to_1.1={stt}")
+    return losses, acc, stt
+
+
+def main(quick: bool = False):
+    steps = 40 if quick else 80
+    results = {}
+    results["heavy_ball"] = run_cfg("heavy_ball", steps, momentum=0.6)
+    results["nesterov"] = run_cfg("nesterov", steps, momentum=0.6,
+                                  nesterov=True)
+    results["mlocal"] = run_cfg("mlocal", steps, algorithm="mavg_mlocal",
+                                momentum=0.4, local_momentum=0.5)
+    results["eta_0.5"] = run_cfg("eta_0.5", steps, momentum=0.6, meta_lr=0.5)
+    results["eta_1.5"] = run_cfg("eta_1.5", steps, momentum=0.6, meta_lr=1.5)
+    # all variants must train
+    for tag, (losses, acc, stt) in results.items():
+        assert losses[-1] < losses[0], tag
+    return results
+
+
+if __name__ == "__main__":
+    main()

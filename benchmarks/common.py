@@ -1,0 +1,61 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MAvgConfig
+from repro.core.meta import init_state, make_meta_step
+from repro.data import classif_batch_fn, classif_eval_set
+from repro.models.simple import mlp_accuracy, mlp_init, mlp_loss
+
+D_IN, CLASSES, HIDDEN = 32, 10, 64
+
+
+def run_mlp(algorithm: str, *, P: int, K: int, mu: float, lr: float = 0.2,
+            steps: int = 60, batch: int = 16, seed: int = 0,
+            local_momentum: float = 0.0, staleness: int = 1,
+            elastic_alpha: float = 0.05):
+    """Train the teacher-classification MLP; returns (losses, val_acc)."""
+    cfg = MAvgConfig(
+        algorithm=algorithm, num_learners=P, k_steps=K, learner_lr=lr,
+        momentum=mu, local_momentum=local_momentum, staleness=staleness,
+        elastic_alpha=elastic_alpha,
+    )
+    params = mlp_init(jax.random.PRNGKey(seed), D_IN, HIDDEN, CLASSES)
+    state = init_state(params, cfg)
+    step = jax.jit(make_meta_step(mlp_loss, cfg))
+    bf = classif_batch_fn(D_IN, CLASSES, P, K, batch)
+    losses = []
+    for i in range(steps):
+        b = bf(jax.random.fold_in(jax.random.PRNGKey(seed + 1), i), i)
+        state, m = step(state, b)
+        losses.append(float(m["loss"]))
+    eval_set = classif_eval_set(D_IN, CLASSES)
+    acc = float(mlp_accuracy(state.global_params, eval_set))
+    return losses, acc
+
+
+def samples_to_target(losses, target: float, P: int, K: int, batch: int):
+    """First sample count at which the running-min loss crosses target.
+
+    This is the paper's speed-up metric (Lemma 4): M-AVG reaches a target
+    accuracy with fewer samples than K-AVG. Returns None if never reached.
+    """
+    best = float("inf")
+    for i, l in enumerate(losses):
+        best = min(best, l)
+        if best <= target:
+            return (i + 1) * P * K * batch
+    return None
+
+
+def timeit(fn, *args, iters: int = 10, warmup: int = 2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us

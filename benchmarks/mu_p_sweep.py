@@ -1,0 +1,36 @@
+"""E2 — paper Figures 9-12 / Lemma 6: with more processors P, the optimal
+momentum mu increases (and very large mu is only good at large P)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import run_mlp
+
+MUS = (0.0, 0.3, 0.5, 0.7, 0.9)
+PS = (2, 4, 8, 16)
+
+
+def main(quick: bool = False, seeds=(0, 1, 2)):
+    steps = 40 if quick else 80
+    if quick:
+        seeds = seeds[:1]
+    table = {}
+    for P in PS:
+        for mu in MUS:
+            accs = []
+            for s in seeds:
+                _, acc = run_mlp("mavg", P=P, K=4, mu=mu, lr=0.15,
+                                 steps=steps, batch=8, seed=s)
+                accs.append(acc)
+            table[(P, mu)] = float(np.mean(accs))
+            print(f"mu_p_sweep,P={P},mu={mu},val_acc={table[(P, mu)]:.4f}")
+    best = {P: max(MUS, key=lambda m: table[(P, m)]) for P in PS}
+    print("mu_p_sweep,best_mu_per_P," +
+          ",".join(f"P{P}={best[P]}" for P in PS))
+    # Lemma 6 direction: optimal mu is non-decreasing-ish in P
+    assert best[PS[-1]] >= best[PS[0]], best
+    return table, best
+
+
+if __name__ == "__main__":
+    main()

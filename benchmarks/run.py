@@ -1,0 +1,68 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+  E1 convergence.py     Figures 1-6 + Table I (M-AVG vs K-AVG, 3 models)
+  E2 mu_p_sweep.py      Figures 9-12 / Lemma 6 (optimal mu grows with P)
+  E3 k_sweep.py         Lemmas 5 & 7 (optimal K > 1; momentum shrinks K)
+  E4 baselines.py       section IV baselines (Downpour, EAMSGD, sync)
+  K  kernel_bench.py    fused block-momentum + flash-attention kernels
+  R  roofline_table.py  section Dry-run / Roofline aggregation
+
+Prints ``name,...`` CSV lines. ``--quick`` shrinks steps/seeds (default
+here so `python -m benchmarks.run` finishes on CPU in ~15 min); pass
+``--full`` for the EXPERIMENTS.md-grade numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset: convergence mu_p k baselines kernel roofline")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (
+        ablations,
+        baselines,
+        convergence,
+        k_sweep,
+        kernel_bench,
+        mu_p_sweep,
+        roofline_table,
+    )
+
+    suites = {
+        "kernel": lambda: kernel_bench.main(quick=quick),
+        "convergence": lambda: convergence.main(quick=quick),
+        "baselines": lambda: baselines.main(quick=quick),
+        "k": lambda: k_sweep.main(quick=quick),
+        "mu_p": lambda: mu_p_sweep.main(quick=quick),
+        "ablations": lambda: ablations.main(quick=quick),
+        "roofline": roofline_table.main,
+    }
+    if args.only:
+        suites = {k: v for k, v in suites.items() if k in args.only}
+
+    failed = []
+    for name, fn in suites.items():
+        print(f"\n===== bench:{name} =====", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+            print(f"bench,{name},{(time.time() - t0) * 1e6:.0f},ok")
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+            print(f"bench,{name},{(time.time() - t0) * 1e6:.0f},FAILED")
+    if failed:
+        sys.exit(f"FAILED suites: {failed}")
+
+
+if __name__ == "__main__":
+    main()

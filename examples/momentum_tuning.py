@@ -1,0 +1,39 @@
+"""The paper's tuning guidelines as a runnable study (Lemmas 6 & 7):
+
+1. more processors -> use a larger momentum mu
+2. switching K-AVG -> M-AVG -> use a smaller K
+
+  PYTHONPATH=src python examples/momentum_tuning.py
+"""
+import sys
+
+sys.path.insert(0, "benchmarks") if "benchmarks" not in sys.path else None
+
+from benchmarks.common import run_mlp  # noqa: E402
+
+
+def guideline_1():
+    print("Guideline 1 (Lemma 6): optimal mu grows with P")
+    for P in (2, 8):
+        accs = {}
+        for mu in (0.0, 0.5, 0.9):
+            _, acc = run_mlp("mavg", P=P, K=4, mu=mu, steps=60, batch=8)
+            accs[mu] = acc
+            print(f"  P={P} mu={mu}: val_acc={acc:.3f}")
+        print(f"  -> best mu at P={P}: {max(accs, key=accs.get)}")
+
+
+def guideline_2():
+    print("Guideline 2 (Lemma 7): momentum prefers smaller K (S = N*K fixed)")
+    for mu in (0.0, 0.7):
+        accs = {}
+        for K in (2, 8):
+            _, acc = run_mlp("mavg", P=4, K=K, mu=mu, steps=128 // K, batch=8)
+            accs[K] = acc
+            print(f"  mu={mu} K={K}: val_acc={acc:.3f}")
+        print(f"  -> best K at mu={mu}: {max(accs, key=accs.get)}")
+
+
+if __name__ == "__main__":
+    guideline_1()
+    guideline_2()

@@ -1,0 +1,49 @@
+"""Quickstart: the paper's algorithm in ~40 lines.
+
+Trains a small MLP on a synthetic teacher-classification stream with
+M-AVG (Algorithm 1) and its K-AVG baseline, printing loss-per-samples
+curves that show the block-momentum acceleration.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs.base import MAvgConfig
+from repro.core.meta import init_state, make_meta_step
+from repro.data import classif_batch_fn, classif_eval_set
+from repro.models.simple import mlp_accuracy, mlp_init, mlp_loss
+
+P, K, B, D, C = 4, 4, 16, 32, 10  # learners, local steps, batch, dims
+
+
+def train(algorithm: str, momentum: float, steps: int = 60):
+    cfg = MAvgConfig(algorithm=algorithm, num_learners=P, k_steps=K,
+                     learner_lr=0.2, momentum=momentum)
+    params = mlp_init(jax.random.PRNGKey(0), D, 64, C)
+    state = init_state(params, cfg)
+    step = jax.jit(make_meta_step(mlp_loss, cfg))
+    batch_fn = classif_batch_fn(D, C, P, K, B)
+
+    losses = []
+    for i in range(steps):
+        batches = batch_fn(jax.random.fold_in(jax.random.PRNGKey(1), i), i)
+        state, metrics = step(state, batches)
+        losses.append(float(metrics["loss"]))
+        if i % 10 == 0:
+            samples = (i + 1) * P * K * B
+            print(f"  {algorithm:5s} samples={samples:6d} "
+                  f"loss={losses[-1]:.4f}")
+    acc = float(mlp_accuracy(state.global_params, classif_eval_set(D, C)))
+    return losses, acc
+
+
+if __name__ == "__main__":
+    print("K-AVG (the baseline: mu = 0)")
+    k_losses, k_acc = train("kavg", 0.0)
+    print("M-AVG (the paper: block momentum mu = 0.7)")
+    m_losses, m_acc = train("mavg", 0.7)
+    print(f"\nfinal: K-AVG loss={k_losses[-1]:.4f} acc={k_acc:.3f} | "
+          f"M-AVG loss={m_losses[-1]:.4f} acc={m_acc:.3f}")
+    print("M-AVG reaches the same loss with "
+          f"~{sum(l > k_losses[-1] for l in m_losses) / len(m_losses):.0%}"
+          " of the samples.")

@@ -1,0 +1,88 @@
+"""End-to-end driver: train a ~100M-parameter dense transformer with
+M-AVG for a few hundred meta-steps on the bigram-teacher LM stream.
+
+This is the deliverable-(b) end-to-end example. On CPU a full 300-step
+run takes hours; the default below runs 300 steps at a reduced width so
+the driver completes on CPU, and ``--width full`` selects the true ~100M
+configuration (the program is identical — same code path the TPU pod
+runs under the production mesh via repro.launch.train).
+
+  PYTHONPATH=src python examples/train_100m.py --steps 300
+  PYTHONPATH=src python examples/train_100m.py --width full --steps 300
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import MAvgConfig, ModelConfig, TrainConfig
+from repro.core.trainer import Trainer
+from repro.data import lm_batch_fn, lm_eval_set
+from repro.models import api as model_api
+from repro.optim import warmup_cosine
+
+
+def make_config(width: str) -> ModelConfig:
+    if width == "full":  # ~100M params
+        return ModelConfig(
+            name="dense-100m", family="dense", num_layers=12, d_model=768,
+            num_heads=12, num_kv_heads=4, d_ff=2048, vocab_size=32768,
+            rope_theta=10000.0,
+        )
+    return ModelConfig(  # CPU-friendly stand-in, same family/code path
+        name="dense-8m", family="dense", num_layers=4, d_model=256,
+        num_heads=4, num_kv_heads=2, d_ff=1024, vocab_size=4096,
+        rope_theta=10000.0,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--width", default="small", choices=["small", "full"])
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--learners", type=int, default=4)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.25)
+    ap.add_argument("--momentum", type=float, default=0.7)
+    ap.add_argument("--checkpoint-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = make_config(args.width)
+    n_params = sum(
+        x.size for x in jax.tree.leaves(
+            jax.eval_shape(lambda k: model_api.init_params(k, cfg),
+                           jax.random.PRNGKey(0))
+        )
+    )
+    print(f"model: {cfg.name} ({n_params / 1e6:.1f}M params), "
+          f"P={args.learners} K={args.k} B={args.batch} seq={args.seq}")
+
+    mcfg = MAvgConfig(algorithm="mavg", num_learners=args.learners,
+                      k_steps=args.k, learner_lr=args.lr,
+                      momentum=args.momentum)
+    tcfg = TrainConfig(model=cfg, mavg=mcfg,
+                       batch_per_learner=args.batch, seq_len=args.seq,
+                       meta_steps=args.steps, log_every=10,
+                       checkpoint_dir=args.checkpoint_dir,
+                       checkpoint_every=100 if args.checkpoint_dir else 0)
+
+    trainer = Trainer(
+        tcfg,
+        lambda p, b: model_api.loss_fn(p, cfg, b),
+        init_params_fn=lambda rng: model_api.init_params(rng, cfg),
+        batch_fn=lm_batch_fn(cfg, args.learners, args.k, args.batch, args.seq),
+        lr_schedule=warmup_cosine(args.lr, 20, args.steps),
+    )
+    history = trainer.run()
+    ev = lm_eval_set(cfg, n=32, seq_len=args.seq)
+    loss, _ = jax.jit(lambda p, b: model_api.loss_fn(p, cfg, b))(
+        trainer.state.global_params, ev)
+    print(f"\ndone: train loss {history[0]['loss']:.3f} -> "
+          f"{history[-1]['loss']:.3f}; eval loss {float(loss):.3f}; "
+          f"samples {history[-1]['samples']}")
+
+
+if __name__ == "__main__":
+    main()

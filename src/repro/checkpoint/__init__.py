@@ -1,0 +1,1 @@
+from repro.checkpoint.npz import load_state, save_state

@@ -1,0 +1,54 @@
+"""Flat-npz pytree checkpointer (no orbax dependency).
+
+Saves the full MetaState — global params, block momentum, learner copies —
+so a resumed run is bit-identical (tested in tests/test_checkpoint.py).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _path_key(p):
+    for attr in ("key", "idx", "name"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat["/".join(_path_key(p) for p in path)] = np.asarray(leaf)
+    return flat
+
+
+def save_state(directory: str, state, step: int) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    np.savez(path, **_flatten(state))
+    return path
+
+
+def load_state(path: str, template):
+    """Restore into the structure of ``template`` (same treedef)."""
+    data = np.load(path)
+    leaves_t, treedef = jax.tree_util.tree_flatten(template)
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    leaves = []
+    for (p, leaf) in paths:
+        key = "/".join(_path_key(q) for q in p)
+        arr = jnp.asarray(data[key], dtype=leaf.dtype)
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest_checkpoint(directory: str):
+    if not os.path.isdir(directory):
+        return None
+    files = sorted(f for f in os.listdir(directory) if f.endswith(".npz"))
+    return os.path.join(directory, files[-1]) if files else None

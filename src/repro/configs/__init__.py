@@ -1,0 +1,10 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    INPUT_SHAPES,
+    InputShape,
+    MAvgConfig,
+    ModelConfig,
+    TrainConfig,
+    all_configs,
+    get_config,
+)

@@ -1,0 +1,234 @@
+"""Config system: model architecture + input shapes + run settings.
+
+Every assigned architecture has a module ``repro/configs/<id>.py`` exposing
+``CONFIG`` (the exact full-scale config from the assignment table, with the
+source citation) and smoke tests use ``CONFIG.reduced()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    citation: str = ""
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 500000.0
+    # --- MoE ---
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    moe_top_k: int = 0
+    d_expert: int = 0  # routed expert hidden size
+    moe_aux_coef: float = 0.01
+    first_dense_layers: int = 0  # deepseek-moe: leading dense FFN layers
+    capacity_factor: float = 1.25
+    # --- SSM / hybrid ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    slstm_every: int = 0  # xlstm: every k-th block is an sLSTM block
+    # --- attention variants ---
+    sliding_window: int = 0  # 0 = full; >0 = sliding-window attention
+    causal: bool = True  # False for encoder-only (hubert)
+    # --- modality frontends (stubs per spec) ---
+    input_mode: str = "tokens"  # tokens | embeddings | tokens+patches
+    num_patches: int = 256  # VLM stub patch count per image
+    meta_tokens: int = 0  # hymba learnable prefix tokens
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        assert self.num_heads % self.num_kv_heads == 0, (
+            f"{self.name}: num_heads={self.num_heads} not a multiple of "
+            f"num_kv_heads={self.num_kv_heads}"
+        )
+
+    # ------------------------------------------------------------------
+    @property
+    def is_encoder_only(self) -> bool:
+        return not self.causal
+
+    @property
+    def supports_decode(self) -> bool:
+        return self.causal
+
+    @property
+    def subquadratic(self) -> bool:
+        """Can this config serve 500k-token contexts?"""
+        return self.family in ("ssm", "hybrid") or self.sliding_window > 0
+
+    # ------------------------------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant: same family/features, tiny dims.
+
+        Per spec: 2 layers, d_model <= 512, <= 4 experts.
+        """
+        d_model = min(self.d_model, 256)
+        n_heads = min(self.num_heads, 4)
+        n_kv = max(1, n_heads * self.num_kv_heads // self.num_heads)
+        updates = dict(
+            num_layers=2,
+            d_model=d_model,
+            num_heads=n_heads,
+            num_kv_heads=n_kv,
+            head_dim=d_model // n_heads,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            num_patches=min(self.num_patches, 16),
+            meta_tokens=min(self.meta_tokens, 8),
+            sliding_window=min(self.sliding_window, 16) if self.sliding_window else 0,
+        )
+        if self.num_experts:
+            updates.update(
+                num_experts=4,
+                num_shared_experts=min(self.num_shared_experts, 1),
+                moe_top_k=min(self.moe_top_k, 2),
+                d_expert=min(self.d_expert, 128),
+                first_dense_layers=min(self.first_dense_layers, 1),
+            )
+        if self.slstm_every:
+            updates["slstm_every"] = 2
+        return replace(self, **updates)
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Analytic parameter count (used for roofline MODEL_FLOPS)."""
+        d, hd = self.d_model, self.head_dim
+        nq, nkv = self.num_heads, self.num_kv_heads
+        attn = d * nq * hd + 2 * d * nkv * hd + nq * hd * d
+        if self.qkv_bias:
+            attn += (nq + 2 * nkv) * hd
+        if self.family == "ssm":  # xlstm: mLSTM/sLSTM blocks, no attn/ffn
+            d_in = self.ssm_expand * d
+            mlstm = 2 * d * d_in + 3 * d_in * d_in // 1 + d_in * d  # rough
+            return self.num_layers * mlstm + 2 * self.vocab_size * d
+        ffn = 3 * d * self.d_ff if self.d_ff else 0
+        moe = 0
+        if self.num_experts:
+            routed = self.num_experts * 3 * d * self.d_expert
+            shared = self.num_shared_experts * 3 * d * self.d_expert
+            router = d * self.num_experts
+            n_moe = self.num_layers - self.first_dense_layers
+            moe = n_moe * (routed + shared + router)
+            ffn = self.first_dense_layers * ffn
+            per_layer = attn
+            total = self.num_layers * per_layer + moe + ffn
+        else:
+            total = self.num_layers * (attn + ffn)
+        if self.family == "hybrid":
+            d_in = self.ssm_expand * d
+            ssm = self.num_layers * (2 * d * d_in + d_in * self.ssm_state * 2)
+            total += ssm
+        embed = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return int(total + embed)
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: only top-k experts count)."""
+        if not self.num_experts:
+            return self.param_count()
+        d = self.d_model
+        n_moe = self.num_layers - self.first_dense_layers
+        inactive = (
+            n_moe * (self.num_experts - self.moe_top_k) * 3 * d * self.d_expert
+        )
+        return int(self.param_count() - inactive)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "llama3-405b",
+    "kimi-k2-1t-a32b",
+    "qwen3-1.7b",
+    "qwen1.5-110b",
+    "xlstm-350m",
+    "deepseek-moe-16b",
+    "hubert-xlarge",
+    "qwen2-7b",
+    "internvl2-76b",
+    "hymba-1.5b",
+]
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(
+        "repro.configs." + arch_id.replace("-", "_").replace(".", "_")
+    )
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+@dataclass(frozen=True)
+class MAvgConfig:
+    """Hyper-parameters of the paper's Algorithm 1 (+ baselines)."""
+
+    algorithm: str = "mavg"  # mavg | kavg | sync | eamsgd | downpour | mavg_mlocal
+    num_learners: int = 4  # P in the paper
+    k_steps: int = 4  # K: local steps between averaging
+    learner_lr: float = 0.1  # gamma_n
+    meta_lr: float = 1.0  # eta_n scaling of the displacement d
+    momentum: float = 0.7  # mu: block momentum
+    local_momentum: float = 0.0  # learner-level momentum (mavg_mlocal)
+    nesterov: bool = False  # beyond-paper: Nesterov block momentum
+    # EAMSGD
+    elastic_alpha: float = 0.05
+    # Downpour (simulated bounded staleness)
+    staleness: int = 1
+    # numerics: meta state always f32 (Theorem 1 variance); learner copies
+    # default f32 for CPU experiments, bf16 for TPU launch configs
+    meta_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    use_pallas: bool = False  # Pallas kernels on TPU; jnp ref elsewhere
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    model: ModelConfig
+    mavg: MAvgConfig = field(default_factory=MAvgConfig)
+    batch_per_learner: int = 8
+    seq_len: int = 128
+    meta_steps: int = 10
+    seed: int = 0
+    log_every: int = 1
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0
+
+
+def to_dict(cfg) -> dict:
+    return dataclasses.asdict(cfg)

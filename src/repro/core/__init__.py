@@ -1,0 +1,4 @@
+# The paper's primary contribution: M-AVG (K-step averaging SGD with block
+# momentum) and its baselines, as a composable meta-optimizer.
+from repro.core.meta import MetaState, init_state, make_meta_step, meta_step
+from repro.core.trainer import Trainer

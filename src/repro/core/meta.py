@@ -1,0 +1,259 @@
+"""The paper's contribution: M-AVG (Algorithm 1) and its baselines, as one
+composable meta-optimizer over an arbitrary loss function.
+
+Algorithms
+----------
+mavg         Algorithm 1: K local SGD steps per learner, then
+             a = mean_j w_j; d = a - w~; v = mu v + d; w~ += v; reset.
+kavg         Zhou & Cong 2017 (the paper's baseline): mavg with mu = 0.
+sync         synchronous MSGD: mavg with K = 1 (identical math, kept as an
+             explicit alias so benchmarks can name it).
+mavg_mlocal  beyond-paper / the paper's section-V note: learner-level MSGD
+             inside the K-step loop, block momentum on top.
+eamsgd       Zhang et al. 2015 elastic averaging with center momentum
+             (the paper's strongest baseline in section IV).
+downpour     Dean et al. 2012, simulated with deterministic bounded
+             staleness (true async is unexpressible under SPMD; staleness
+             is the quantity the convergence analyses bound — DESIGN.md §4).
+
+The learner dimension is a leading pytree axis of size L = P (the paper's
+number of processors). Under pjit that axis is sharded over the mesh's
+learner axes, so the K inner steps emit no cross-learner collectives and
+the meta averaging is one all-reduce — the paper's communication model.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import MAvgConfig
+from repro.utils import (
+    tree_axpy,
+    tree_broadcast_learners,
+    tree_cast,
+    tree_mean_axis0,
+    tree_norm,
+    tree_scale,
+    tree_sub,
+    tree_zeros_like,
+)
+
+LossFn = Callable[..., tuple[jnp.ndarray, dict]]  # (params, batch) -> (loss, aux)
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class MetaState:
+    """Full state of the distributed trainer.
+
+    global_params: w~ (meta dtype, f32)
+    momentum:      v, the block-momentum buffer (mavg/eamsgd) or None
+    learners:      stacked learner copies, leading axis L
+    local_momentum: learner-level momentum stacks (mavg_mlocal) or None
+    stale_queue:   downpour staleness queue (tau, ...) or None
+    step:          meta iteration n
+    """
+
+    global_params: Any
+    momentum: Any
+    learners: Any
+    local_momentum: Any
+    stale_queue: Any
+    step: jnp.ndarray
+
+
+def init_state(params, cfg: MAvgConfig) -> MetaState:
+    """Meta state (w~, v) in cfg.meta_dtype (f32 — Theorem 1's momentum
+    variance is precision-sensitive); learner copies in cfg.compute_dtype
+    (bf16 on TPU: halves every weight collective and the L-fold copy
+    memory; the meta average casts back up to f32)."""
+    gp = tree_cast(params, cfg.meta_dtype)
+    learners = tree_broadcast_learners(
+        tree_cast(gp, cfg.compute_dtype), cfg.num_learners
+    )
+    return MetaState(
+        global_params=gp,
+        momentum=tree_zeros_like(gp) if cfg.algorithm != "kavg" else tree_zeros_like(gp),
+        learners=learners,
+        local_momentum=(
+            tree_zeros_like(learners) if cfg.algorithm == "mavg_mlocal" else None
+        ),
+        stale_queue=(
+            jax.tree.map(
+                lambda x: jnp.zeros((cfg.staleness,) + x.shape, x.dtype), gp
+            )
+            if cfg.algorithm == "downpour"
+            else None
+        ),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# local phase: K SGD/MSGD steps per learner, no cross-learner communication
+# ---------------------------------------------------------------------------
+
+
+def _local_phase(loss_fn: LossFn, learners, local_mom, batches, cfg: MAvgConfig,
+                 lr):
+    """batches: pytree with leaves (L, K, B_local, ...).
+
+    Returns (new learners, new local momentum, mean loss, mean grad-norm).
+    """
+
+    def one_learner(w, mom, bks):
+        def step(carry, b):
+            w, mom = carry
+            (loss, _aux), g = jax.value_and_grad(loss_fn, has_aux=True)(w, b)
+            gnorm = tree_norm(g)
+            # update math in f32, stored back in the learner dtype (bf16
+            # learner copies keep collectives/memory at half cost)
+            if cfg.local_momentum > 0.0:
+                mom = jax.tree.map(
+                    lambda m, gi: (
+                        cfg.local_momentum * m.astype(jnp.float32)
+                        - lr * gi.astype(jnp.float32)
+                    ).astype(m.dtype),
+                    mom, g,
+                )
+                w = jax.tree.map(
+                    lambda wi, m: (wi + m.astype(wi.dtype)), w, mom
+                )
+            else:
+                w = jax.tree.map(
+                    lambda wi, gi: (
+                        wi.astype(jnp.float32) - lr * gi.astype(jnp.float32)
+                    ).astype(wi.dtype),
+                    w, g,
+                )
+            return (w, mom), (loss, gnorm)
+
+        (w, mom), (losses, gnorms) = lax.scan(step, (w, mom), bks)
+        return w, mom, losses.mean(), gnorms.mean()
+
+    if local_mom is None:
+        local_mom = tree_zeros_like(learners)
+        out = jax.vmap(one_learner)(learners, local_mom, batches)
+        return out[0], None, out[2].mean(), out[3].mean()
+    out = jax.vmap(one_learner)(learners, local_mom, batches)
+    return out[0], out[1], out[2].mean(), out[3].mean()
+
+
+# ---------------------------------------------------------------------------
+# meta updates
+# ---------------------------------------------------------------------------
+
+
+def _block_momentum_update(gp, v, avg, cfg: MAvgConfig):
+    """v <- mu v + eta d ; w~ <- w~ + v  (+ optional Nesterov lookahead).
+
+    When cfg.use_pallas is set the fused single-HBM-pass Pallas kernel is
+    used (TPU); otherwise the jnp reference (XLA fuses most of it too).
+    """
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+
+        return kops.block_momentum_tree(
+            gp, v, avg, mu=cfg.momentum, eta=cfg.meta_lr, nesterov=cfg.nesterov
+        )
+    d = tree_sub(avg, gp)
+    v = jax.tree.map(lambda vi, di: cfg.momentum * vi + cfg.meta_lr * di, v, d)
+    if cfg.nesterov:
+        gp = jax.tree.map(
+            lambda w, vi, di: w + cfg.momentum * vi + cfg.meta_lr * di, gp, v, d
+        )
+    else:
+        gp = jax.tree.map(jnp.add, gp, v)
+    return gp, v
+
+
+def meta_step(state: MetaState, batches, *, loss_fn: LossFn, cfg: MAvgConfig,
+              lr=None) -> tuple[MetaState, dict]:
+    """One meta-iteration n -> n+1 of Algorithm 1 (or a baseline).
+
+    batches: pytree with leaves (L, K, B_local, ...) — K local mini-batches
+    for each of the L learners.
+    """
+    lr = jnp.float32(cfg.learner_lr) if lr is None else lr
+    algo = cfg.algorithm
+    learners, local_mom, loss, gnorm = _local_phase(
+        loss_fn, state.learners, state.local_momentum, batches, cfg, lr
+    )
+    gp, v = state.global_params, state.momentum
+    metrics = {"loss": loss, "grad_norm": gnorm}
+
+    if algo in ("mavg", "kavg", "sync", "mavg_mlocal"):
+        mu = 0.0 if algo == "kavg" else cfg.momentum
+        avg = tree_cast(tree_mean_axis0(learners), cfg.meta_dtype)
+        eff = MAvgConfig(**{**cfg.__dict__, "momentum": mu})
+        gp, v = _block_momentum_update(gp, v, avg, eff)
+        learners = tree_broadcast_learners(tree_cast(gp, _ldtype(learners)), cfg.num_learners)
+        metrics["v_norm"] = tree_norm(v)
+        metrics["displacement_norm"] = tree_norm(tree_sub(avg, state.global_params))
+
+    elif algo == "eamsgd":
+        # elastic force toward the center; center gets block momentum.
+        alpha = cfg.elastic_alpha
+        e_mean = tree_sub(tree_cast(tree_mean_axis0(learners), cfg.meta_dtype), gp)
+        # v <- mu v + alpha * P * mean_j(w_j - w~); w~ += v
+        v = jax.tree.map(
+            lambda vi, ei: cfg.momentum * vi + alpha * cfg.num_learners * ei,
+            v, e_mean,
+        )
+        gp = jax.tree.map(jnp.add, gp, v)
+        # learners relax toward the (old) center: w_j -= alpha (w_j - w~)
+        gp_b = tree_broadcast_learners(tree_cast(gp, _ldtype(learners)), cfg.num_learners)
+        learners = jax.tree.map(
+            lambda w, c: w - alpha * (w - c), learners, gp_b
+        )
+        metrics["v_norm"] = tree_norm(v)
+
+    elif algo == "downpour":
+        # deterministic bounded-staleness simulation: the displacement
+        # computed this round is applied tau rounds later.
+        # displacement relative to what learners started from this round:
+        d_now = tree_sub(
+            tree_cast(tree_mean_axis0(learners), cfg.meta_dtype), gp
+        )
+        queue = state.stale_queue
+        d_apply = jax.tree.map(lambda q: q[0], queue)
+        is_warm = state.step >= cfg.staleness
+        gp = jax.tree.map(
+            lambda w, d: w + jnp.where(is_warm, 1.0, 0.0) * d, gp, d_apply
+        )
+        queue = jax.tree.map(
+            lambda q, d: jnp.concatenate([q[1:], d[None]], axis=0), queue, d_now
+        )
+        learners = tree_broadcast_learners(
+            tree_cast(gp, _ldtype(learners)), cfg.num_learners
+        )
+        state = MetaState(
+            global_params=gp, momentum=v, learners=learners,
+            local_momentum=local_mom, stale_queue=queue,
+            step=state.step + 1,
+        )
+        metrics["stale_norm"] = tree_norm(d_apply)
+        return state, metrics
+    else:
+        raise ValueError(f"unknown algorithm {algo!r}")
+
+    state = MetaState(
+        global_params=gp, momentum=v, learners=learners,
+        local_momentum=local_mom, stale_queue=state.stale_queue,
+        step=state.step + 1,
+    )
+    return state, metrics
+
+
+def _ldtype(learners):
+    return jax.tree.leaves(learners)[0].dtype
+
+
+def make_meta_step(loss_fn: LossFn, cfg: MAvgConfig):
+    """Returns a jit-able ``step(state, batches) -> (state, metrics)``."""
+    return partial(meta_step, loss_fn=loss_fn, cfg=cfg)

@@ -1,0 +1,94 @@
+"""High-level training driver tying together model, data, meta-optimizer,
+checkpointing and (optionally) a device mesh.
+
+On a real cluster the same Trainer runs under the production mesh from
+``repro.launch.mesh`` (the learner axis sharded over data/pod axes); on CPU
+it runs the identical jitted program on one device — the SPMD program is
+the same, which is what the multi-pod dry-run proves.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import load_state, save_state
+from repro.configs.base import MAvgConfig, TrainConfig
+from repro.core.meta import init_state, make_meta_step
+
+
+class Trainer:
+    def __init__(
+        self,
+        train_cfg: TrainConfig,
+        loss_fn: Callable,
+        init_params_fn: Callable,
+        batch_fn: Callable,  # (rng, step) -> batches (L, K, B, ...)
+        lr_schedule: Optional[Callable] = None,
+        mesh=None,
+        state_shardings=None,
+    ):
+        self.cfg = train_cfg
+        self.mcfg: MAvgConfig = train_cfg.mavg
+        self.loss_fn = loss_fn
+        self.batch_fn = batch_fn
+        self.lr_schedule = lr_schedule
+        self.mesh = mesh
+
+        rng = jax.random.PRNGKey(train_cfg.seed)
+        self.data_rng, init_rng = jax.random.split(rng)
+        params = init_params_fn(init_rng)
+        self.state = init_state(params, self.mcfg)
+        step_fn = make_meta_step(loss_fn, self.mcfg)
+
+        def jit_step(state, batches, lr):
+            return step_fn(state, batches, lr=lr)
+
+        kwargs = {}
+        if mesh is not None and state_shardings is not None:
+            kwargs = dict(in_shardings=(state_shardings, None, None),
+                          out_shardings=(state_shardings, None))
+        self._step = jax.jit(jit_step, **kwargs)
+        self.history: list[dict] = []
+
+    def run(self, meta_steps: Optional[int] = None, log=print):
+        n = meta_steps if meta_steps is not None else self.cfg.meta_steps
+        t0 = time.time()
+        for i in range(n):
+            step = int(self.state.step)
+            rng = jax.random.fold_in(self.data_rng, step)
+            batches = self.batch_fn(rng, step)
+            lr = (
+                self.lr_schedule(step)
+                if self.lr_schedule
+                else jnp.float32(self.mcfg.learner_lr)
+            )
+            self.state, metrics = self._step(self.state, batches, lr)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics["meta_step"] = step
+            metrics["samples"] = (
+                (step + 1)
+                * self.mcfg.num_learners
+                * self.mcfg.k_steps
+                * self.cfg.batch_per_learner
+            )
+            self.history.append(metrics)
+            if log and (step % self.cfg.log_every == 0):
+                log(
+                    f"[{self.mcfg.algorithm}] meta_step={step} "
+                    f"loss={metrics['loss']:.4f} "
+                    f"gnorm={metrics.get('grad_norm', 0):.3f} "
+                    f"({time.time() - t0:.1f}s)"
+                )
+            if (
+                self.cfg.checkpoint_dir
+                and self.cfg.checkpoint_every
+                and (step + 1) % self.cfg.checkpoint_every == 0
+            ):
+                save_state(self.cfg.checkpoint_dir, self.state, step + 1)
+        return self.history
+
+    def restore(self, path):
+        self.state = load_state(path, self.state)

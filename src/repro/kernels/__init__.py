@@ -1,0 +1,4 @@
+# Pallas TPU kernels for the paper's compute hot-spots, each with a jit'd
+# wrapper (ops.py) and a pure-jnp oracle (ref.py). Validated on CPU with
+# interpret=True; compiled natively on TPU.
+from repro.kernels import ops, ref

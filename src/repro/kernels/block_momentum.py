@@ -1,0 +1,72 @@
+"""Fused block-momentum meta-update — the paper's Algorithm 1 meta step —
+as a Pallas TPU kernel.
+
+Naively the meta update
+    d = a - w;  v' = mu v + eta d;  w' = w + v'        (Nesterov variant:
+    w' = w + mu v' + eta d)
+is four pytree-wide elementwise passes = 4 reads + 2 writes of the full
+parameter set from HBM. The update is purely memory-bound (zero FLOP/byte
+reuse), so the only lever is touching HBM once: this kernel streams
+(8,128)-aligned VMEM tiles of (w, v, a) and emits (w', v') in a single
+pass — 3 reads + 2 writes, and XLA cannot re-split it.
+
+Layout: callers flatten each parameter leaf to (rows, 128) with rows a
+multiple of 8 (ops.py pads); the grid walks row-blocks of 256 rows so the
+working set (5 tiles x 256 x 128 x 4B = 640 KiB) sits comfortably in the
+~16 MiB VMEM budget while remaining large enough to saturate HBM DMA.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+LANES = 128
+
+
+def _kernel(w_ref, v_ref, a_ref, mu_ref, eta_ref, w_out_ref, v_out_ref, *,
+            nesterov: bool):
+    mu = mu_ref[0, 0]
+    eta = eta_ref[0, 0]
+    w = w_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    a = a_ref[...].astype(jnp.float32)
+    d = a - w
+    v_new = mu * v + eta * d
+    if nesterov:
+        w_new = w + mu * v_new + eta * d
+    else:
+        w_new = w + v_new
+    w_out_ref[...] = w_new.astype(w_out_ref.dtype)
+    v_out_ref[...] = v_new.astype(v_out_ref.dtype)
+
+
+def block_momentum_2d(w, v, a, mu, eta, *, nesterov: bool = False,
+                      interpret: bool = False, block: int | None = None):
+    """w, v, a: (rows, 128) with rows % 8 == 0. Returns (w', v')."""
+    rows, lanes = w.shape
+    assert lanes == LANES and rows % 8 == 0, w.shape
+    if block is None:
+        block = min(BLOCK_ROWS, rows)
+        while rows % block:
+            block //= 2
+    assert rows % block == 0, (rows, block)
+    grid = (rows // block,)
+    spec = pl.BlockSpec((block, LANES), lambda i: (i, 0))
+    scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    mu_arr = jnp.asarray(mu, jnp.float32).reshape(1, 1)
+    eta_arr = jnp.asarray(eta, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_kernel, nesterov=nesterov),
+        grid=grid,
+        in_specs=[spec, spec, spec, scalar_spec, scalar_spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(w.shape, w.dtype),
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+        ],
+        interpret=interpret,
+    )(w, v, a, mu_arr, eta_arr)

@@ -1,0 +1,42 @@
+"""Fused learner-level SGD apply ``w <- w - lr * g`` as a Pallas kernel.
+
+Same memory-bound reasoning as block_momentum.py: one VMEM streaming pass
+per (8,128)-aligned tile instead of separate scale + subtract HLO ops.
+Used for the inner K-step loop of Algorithm 1 when ``use_pallas`` is on.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+LANES = 128
+
+
+def _kernel(w_ref, g_ref, lr_ref, out_ref):
+    lr = lr_ref[0, 0]
+    w = w_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    out_ref[...] = (w - lr * g).astype(out_ref.dtype)
+
+
+def sgd_apply_2d(w, g, lr, *, interpret: bool = False, block: int | None = None):
+    rows, lanes = w.shape
+    assert lanes == LANES and rows % 8 == 0, w.shape
+    if block is None:
+        block = min(BLOCK_ROWS, rows)
+        while rows % block:
+            block //= 2
+    assert rows % block == 0
+    spec = pl.BlockSpec((block, LANES), lambda i: (i, 0))
+    scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    lr_arr = jnp.asarray(lr, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _kernel,
+        grid=(rows // block,),
+        in_specs=[spec, spec, scalar_spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
+        interpret=interpret,
+    )(w, g, lr_arr)

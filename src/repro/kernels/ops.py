@@ -1,0 +1,130 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy: on TPU the compiled kernels run natively; everywhere else
+(this CPU container, tests) they run in ``interpret=True`` mode, which
+executes the same kernel body per-block in Python/XLA — bit-comparable
+logic, no TPU required. The pure-jnp oracles live in ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import block_momentum as _bm
+from repro.kernels import flash_attention as _fa
+from repro.kernels import local_sgd as _sgd
+from repro.kernels import ref as _ref
+
+LANES = 128
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# layout helpers: leaf <-> (rows, 128) padded 2-D
+# ---------------------------------------------------------------------------
+
+
+def _to_2d(x):
+    n = x.size
+    rows = -(-n // LANES)
+    rows = -(-rows // 8) * 8  # sublane multiple
+    pad = rows * LANES - n
+    flat = jnp.pad(x.reshape(-1), (0, pad))
+    return flat.reshape(rows, LANES), x.shape, n
+
+
+def _from_2d(x2, shape, n):
+    return x2.reshape(-1)[:n].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# block momentum
+# ---------------------------------------------------------------------------
+
+
+def block_momentum(w, v, a, *, mu, eta=1.0, nesterov=False, interpret=None):
+    """Fused meta update on one array. Returns (w', v')."""
+    interpret = _default_interpret() if interpret is None else interpret
+    w2, shape, n = _to_2d(w)
+    v2, _, _ = _to_2d(v)
+    a2, _, _ = _to_2d(a)
+    w2n, v2n = _bm.block_momentum_2d(
+        w2, v2, a2, mu, eta, nesterov=nesterov, interpret=interpret
+    )
+    return _from_2d(w2n, shape, n), _from_2d(v2n, shape, n)
+
+
+def block_momentum_tree(gp, v, avg, *, mu, eta=1.0, nesterov=False,
+                        interpret=None):
+    """Apply the fused update leaf-wise over a parameter pytree."""
+    flat_gp, treedef = jax.tree_util.tree_flatten(gp)
+    flat_v = treedef.flatten_up_to(v)
+    flat_avg = treedef.flatten_up_to(avg)
+    new_w, new_v = [], []
+    for wi, vi, ai in zip(flat_gp, flat_v, flat_avg):
+        wn, vn = block_momentum(
+            wi, vi, ai, mu=mu, eta=eta, nesterov=nesterov, interpret=interpret
+        )
+        new_w.append(wn)
+        new_v.append(vn)
+    return (
+        jax.tree_util.tree_unflatten(treedef, new_w),
+        jax.tree_util.tree_unflatten(treedef, new_v),
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused SGD apply
+# ---------------------------------------------------------------------------
+
+
+def sgd_apply(w, g, lr, *, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    w2, shape, n = _to_2d(w)
+    g2, _, _ = _to_2d(g)
+    out = _sgd.sgd_apply_2d(w2, g2, lr, interpret=interpret)
+    return _from_2d(out, shape, n)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q, k, v, *, causal=True, sliding_window=0,
+                    prefix_global=0, interpret=None):
+    """q: (B, S, H, D); k, v: (B, S, KV, D) -> (B, S, H, D).
+
+    Pads D to a lane multiple and S to a block multiple; GQA is handled
+    inside the kernel via BlockSpec index maps (no repeated K/V).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    scale = 1.0 / (D ** 0.5)
+
+    d_pad = -(-D // LANES) * LANES
+    bq = min(_fa.DEFAULT_BLOCK_Q, max(8, S))
+    while S % bq:
+        bq //= 2
+    bk = min(_fa.DEFAULT_BLOCK_K, max(8, S))
+    while S % bk:
+        bk //= 2
+
+    def prep(x, nh):
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, d_pad - D)))
+        return x.transpose(0, 2, 1, 3).reshape(B * nh, S, d_pad)
+
+    out = _fa.flash_attention_bhsd(
+        prep(q, H), prep(k, KV), prep(v, KV),
+        causal=causal, sliding_window=sliding_window,
+        prefix_global=prefix_global, scale=scale,
+        block_q=bq, block_k=bk, interpret=interpret,
+    )
+    out = out.reshape(B, H, S, d_pad).transpose(0, 2, 1, 3)[..., :D]
+    return out

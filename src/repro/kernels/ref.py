@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import full_attention
+
+
+def block_momentum_ref(w, v, a, mu, eta, *, nesterov: bool = False):
+    """Four-pass reference of the fused meta update."""
+    w32, v32, a32 = (x.astype(jnp.float32) for x in (w, v, a))
+    d = a32 - w32
+    v_new = mu * v32 + eta * d
+    if nesterov:
+        w_new = w32 + mu * v_new + eta * d
+    else:
+        w_new = w32 + v_new
+    return w_new.astype(w.dtype), v_new.astype(v.dtype)
+
+
+def sgd_apply_ref(w, g, lr):
+    return (w.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(w.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, sliding_window=0,
+                        prefix_global=0):
+    """q: (B, S, H, D); k, v: (B, S, KV, D). Full-softmax oracle."""
+    return full_attention(
+        q, k, v, causal=causal, sliding_window=sliding_window,
+        prefix_global=prefix_global,
+    )

@@ -1,0 +1,286 @@
+"""Dry-run machinery: lower + compile every (arch x input-shape x mesh)
+combination against the production mesh, extract memory / cost / collective
+statistics for the roofline analysis.
+
+This module does NOT touch XLA_FLAGS — the CLI entry point
+(repro/launch/dryrun.py) sets the 512-device host platform before any jax
+import, per the spec. Import this library under whatever mesh you have.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from dataclasses import replace
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (
+    ARCH_IDS,
+    INPUT_SHAPES,
+    InputShape,
+    MAvgConfig,
+    ModelConfig,
+    get_config,
+)
+from repro.core.meta import make_meta_step
+from repro.launch import mesh as meshlib
+from repro.launch import specs as S
+from repro.models import api as model_api
+from repro.roofline import collective_bytes, compute_terms
+from repro.roofline.hlo_cost import hlo_cost
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../benchmarks/results/dryrun")
+
+
+# ---------------------------------------------------------------------------
+# applicability (DESIGN.md section 7)
+# ---------------------------------------------------------------------------
+
+
+def applicability(cfg: ModelConfig, shape: InputShape):
+    """Returns (runs: bool, reason: str, serve_cfg: ModelConfig)."""
+    if shape.is_decode and cfg.is_encoder_only:
+        return False, "encoder-only architecture has no autoregressive decode", cfg
+    if shape.name == "long_500k":
+        if cfg.subquadratic:
+            return True, "", cfg
+        if cfg.name == "qwen3-1.7b":
+            # demonstration sliding-window serve variant (DESIGN.md section 7)
+            return True, "sliding-window-8192 serve variant", replace(
+                cfg, sliding_window=8192
+            )
+        return False, "full O(S^2) attention at 524k context; no sub-quadratic variant defined by the model card", cfg
+    return True, "", cfg
+
+
+# ---------------------------------------------------------------------------
+# step builders — return (jitted_fn, abstract_args tuple)
+# ---------------------------------------------------------------------------
+
+
+def build_train(cfg: ModelConfig, mesh, shape: InputShape, *,
+                hierarchical: bool = False, algorithm: str = "mavg",
+                k_steps: int = S.DRYRUN_K_STEPS, tp_mode: str = "megatron",
+                compute_dtype: str = "float32"):
+    L = (mesh.size if tp_mode == "dp"
+         else meshlib.num_learners(mesh, hierarchical=hierarchical))
+    mcfg = MAvgConfig(
+        algorithm=algorithm, num_learners=L, k_steps=k_steps,
+        learner_lr=0.01, momentum=0.7, compute_dtype=compute_dtype,
+    )
+
+    def loss_fn(params, batch):
+        return model_api.loss_fn(params, cfg, batch)
+
+    step_fn = make_meta_step(loss_fn, mcfg)
+
+    def train_step(state, batches):
+        return step_fn(state, batches)
+
+    state_sds = S.abstract_state(cfg, mcfg)
+    batch_sds = S.train_input_specs(cfg, shape, L, k_steps)
+    state_sh = S.state_shardings(cfg, mcfg, mesh, hierarchical=hierarchical,
+                                 tp_mode=tp_mode)
+    laxes = (tuple(mesh.axis_names) if tp_mode == "dp"
+             else meshlib.learner_axes(mesh, hierarchical=hierarchical))
+    lax_spec = laxes if len(laxes) > 1 else laxes[0]
+    b_loc = shape.global_batch // L
+    if tp_mode == "fsdp" and b_loc % mesh.shape["model"] == 0:
+        # fsdp mode: local batch data-parallel over the model axis
+        batch_spec = P(lax_spec, None, "model")
+    else:
+        batch_spec = P(lax_spec)
+    batch_sh = {name: NamedSharding(mesh, batch_spec) for name in batch_sds}
+    fn = jax.jit(
+        train_step, in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, None),
+    )
+    return fn, (state_sds, batch_sds), mcfg
+
+
+def build_prefill(cfg: ModelConfig, mesh, shape: InputShape):
+    def prefill(params, batch):
+        logits, _ = model_api.forward(params, cfg, batch)
+        return logits
+
+    params_sds = S.abstract_params(cfg)
+    batch_sds = S.prefill_input_specs(cfg, shape)
+    params_sh = S.serve_param_shardings(cfg, mesh)
+    batch_sh = S.prefill_input_shardings(cfg, mesh, shape)
+    fn = jax.jit(prefill, in_shardings=(params_sh, batch_sh))
+    return fn, (params_sds, batch_sds)
+
+
+def build_decode(cfg: ModelConfig, mesh, shape: InputShape):
+    def serve_step(params, cache, tokens):
+        return model_api.decode_step(params, cfg, cache, tokens)
+
+    params_sds = S.abstract_params(cfg)
+    cache_sds, tokens_sds = S.decode_input_specs(cfg, shape)
+    params_sh = S.serve_param_shardings(cfg, mesh)
+    cache_sh = S.cache_shardings(cfg, mesh, shape)
+    tok_sh = S.decode_token_sharding(mesh, shape)
+    fn = jax.jit(serve_step, in_shardings=(params_sh, cache_sh, tok_sh))
+    return fn, (params_sds, cache_sds, tokens_sds)
+
+
+# ---------------------------------------------------------------------------
+# single-combination dry run
+# ---------------------------------------------------------------------------
+
+
+def _analyses(compiled):
+    out = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        out["cost"] = {k: float(v) for k, v in dict(ca).items()
+                       if isinstance(v, (int, float))}
+    except Exception as e:  # pragma: no cover
+        out["cost"] = {"error": str(e)}
+    try:
+        ma = compiled.memory_analysis()
+        if ma is None:
+            out["memory"] = {}
+        else:
+            out["memory"] = {
+                attr: float(getattr(ma, attr))
+                for attr in (
+                    "argument_size_in_bytes",
+                    "output_size_in_bytes",
+                    "temp_size_in_bytes",
+                    "generated_code_size_in_bytes",
+                )
+                if hasattr(ma, attr)
+            }
+    except Exception as e:  # pragma: no cover
+        out["memory"] = {"error": str(e)}
+    return out
+
+
+def _sharded_arg_bytes(sds_tree, sh_tree, mesh) -> float:
+    """Analytic per-device bytes of the arguments under their shardings."""
+    total = 0.0
+    sds_leaves = jax.tree.leaves(sds_tree)
+    sh_leaves = jax.tree.leaves(
+        sh_tree, is_leaf=lambda x: isinstance(x, NamedSharding)
+    )
+    for sds, sh in zip(sds_leaves, sh_leaves):
+        n_shards = 1
+        if isinstance(sh, NamedSharding):
+            for axis in sh.spec:
+                if axis is None:
+                    continue
+                for a in (axis if isinstance(axis, tuple) else (axis,)):
+                    n_shards *= mesh.shape[a]
+        total += sds.size * jnp.dtype(sds.dtype).itemsize / n_shards
+    return total
+
+
+def run_one(arch: str, shape_name: str, mesh_name: str, *,
+            hierarchical: bool = False, algorithm: str = "mavg",
+            save_hlo: bool = False, tp_mode: str = "megatron",
+            compute_dtype: str = "float32", variant: str = "",
+            k_steps: int = S.DRYRUN_K_STEPS,
+            expert_shard_map: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    runs, reason, cfg_eff = applicability(cfg, shape)
+    mode = "hier" if hierarchical else "faithful"
+    if variant:
+        mode = f"{mode}+{variant}"
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "mode": mode, "algorithm": algorithm, "tp_mode": tp_mode,
+        "compute_dtype": compute_dtype,
+        "skipped": not runs, "reason": reason,
+    }
+    if not runs:
+        return result
+
+    mesh = meshlib.make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = mesh.size
+    t0 = time.time()
+    if expert_shard_map and shape.kind != "train":
+        # manual all-to-all-style expert parallelism (serving only —
+        # shard_map does not compose with the learner vmap)
+        from repro.models import moe
+
+        moe.set_expert_axis("model", mesh)
+    with mesh:
+        if shape.kind == "train":
+            fn, args, mcfg = build_train(
+                cfg_eff, mesh, shape, hierarchical=hierarchical,
+                algorithm=algorithm, tp_mode=tp_mode,
+                compute_dtype=compute_dtype, k_steps=k_steps,
+            )
+            k_steps = mcfg.k_steps
+        elif shape.kind == "prefill":
+            fn, args = build_prefill(cfg_eff, mesh, shape)
+            k_steps = 1
+        else:
+            fn, args = build_decode(cfg_eff, mesh, shape)
+            k_steps = 1
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    if expert_shard_map:
+        from repro.models import moe
+
+        moe.set_expert_axis(None, None)
+
+    result.update(_analyses(compiled))
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    result["collectives"] = {"total": coll["total"], "by_type": coll["by_type"]}
+    result["n_collective_sites"] = len(coll["sites"])
+    result["lower_s"] = round(t_lower, 2)
+    result["compile_s"] = round(t_compile, 2)
+    result["hlo_lines"] = hlo.count("\n")
+
+    # trip-count-aware FLOP/byte totals from the HLO itself
+    # (cost_analysis counts while bodies once — see hlo_cost.py)
+    cost = hlo_cost(hlo)
+    result["hlo_cost"] = {"flops": cost.flops, "bytes": cost.bytes}
+    hlo_flops = cost.flops or result["cost"].get("flops", 0.0)
+    hlo_bytes = cost.bytes or result["cost"].get("bytes accessed", 0.0)
+    terms = compute_terms(
+        arch=arch, shape=shape, mesh_name=mesh_name, chips=chips,
+        hlo_flops=hlo_flops, hlo_bytes=hlo_bytes,
+        collective_bytes=float(coll["total"]), cfg=cfg_eff, k_steps=k_steps,
+    )
+    result["roofline"] = terms.to_dict()
+    result["param_count"] = cfg_eff.param_count()
+    result["active_param_count"] = cfg_eff.active_param_count()
+    if save_hlo:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        hpath = os.path.join(
+            RESULTS_DIR, f"{arch}__{shape_name}__{mesh_name}__{mode}.hlo.txt"
+        )
+        with open(hpath, "w") as f:
+            f.write(hlo)
+        result["hlo_path"] = hpath
+    return result
+
+
+def result_path(arch, shape_name, mesh_name, mode="faithful", algorithm="mavg"):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    suffix = "" if algorithm == "mavg" else f"__{algorithm}"
+    return os.path.join(
+        RESULTS_DIR, f"{arch}__{shape_name}__{mesh_name}__{mode}{suffix}.json"
+    )
+
+
+def save_result(res: dict, algorithm="mavg"):
+    path = result_path(res["arch"], res["shape"], res["mesh"], res["mode"],
+                       res.get("algorithm", algorithm))
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    return path

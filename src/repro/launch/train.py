@@ -1,0 +1,85 @@
+"""Training launcher: end-to-end M-AVG training of an assigned architecture
+(reduced or full config) on whatever devices are available.
+
+On CPU this trains the reduced config with a small learner count (the
+end-to-end example driver); on a real TPU pod, pass --full and the
+production mesh from mesh.py is used with the learner axis sharded over
+'data' (the jitted program is identical — that is what the dry-run
+proves).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+      --algorithm mavg --learners 4 --k 4 --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MAvgConfig, TrainConfig, get_config
+from repro.core.trainer import Trainer
+from repro.data import lm_batch_fn, lm_eval_set
+from repro.models import api as model_api
+from repro.optim import warmup_cosine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--algorithm", default="mavg",
+                    choices=["mavg", "kavg", "sync", "mavg_mlocal", "eamsgd",
+                             "downpour"])
+    ap.add_argument("--learners", type=int, default=4)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=0.3)
+    ap.add_argument("--momentum", type=float, default=0.7)
+    ap.add_argument("--full", action="store_true",
+                    help="full-scale config (TPU pod required)")
+    ap.add_argument("--checkpoint-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    if cfg.input_mode != "tokens":
+        raise SystemExit(
+            f"{args.arch} uses stub-frontend inputs; use examples/ for it"
+        )
+
+    mcfg = MAvgConfig(
+        algorithm=args.algorithm, num_learners=args.learners, k_steps=args.k,
+        learner_lr=args.lr, momentum=args.momentum,
+    )
+    tcfg = TrainConfig(
+        model=cfg, mavg=mcfg, batch_per_learner=args.batch, seq_len=args.seq,
+        meta_steps=args.steps, checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=10 if args.checkpoint_dir else 0,
+    )
+
+    def loss_fn(params, batch):
+        return model_api.loss_fn(params, cfg, batch)
+
+    trainer = Trainer(
+        tcfg,
+        loss_fn,
+        init_params_fn=lambda rng: model_api.init_params(rng, cfg),
+        batch_fn=lm_batch_fn(cfg, args.learners, args.k, args.batch, args.seq),
+        lr_schedule=warmup_cosine(args.lr, 5, args.steps),
+    )
+    history = trainer.run()
+
+    eval_batch = lm_eval_set(cfg, n=32, seq_len=args.seq)
+    loss, _ = jax.jit(loss_fn)(trainer.state.global_params, eval_batch)
+    print(f"\nfinal train loss {history[-1]['loss']:.4f}  "
+          f"eval loss {float(loss):.4f}  "
+          f"samples {history[-1]['samples']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+from repro.models.api import (
+    batch_shapes,
+    decode_step,
+    forward,
+    get_model,
+    init_cache,
+    init_params,
+    loss_fn,
+    make_batch,
+    prefill,
+)

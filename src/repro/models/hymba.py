@@ -1,0 +1,373 @@
+"""Hymba (arXiv:2411.13676): every layer runs attention heads and mamba
+(selective-SSM) heads *in parallel* on the same input; the two branch
+outputs are normalised, combined with learned per-branch scalars, and
+projected. 128 learnable meta tokens are prepended and remain globally
+attendable under sliding-window attention (they are the "global path";
+the reference model additionally keeps 3 full-attention layers, which we
+fold into the meta-token mechanism — noted in DESIGN.md).
+
+Training uses an associative scan for the SSM (O(S log S) depth) and
+sliding-window attention; decode carries O(1) SSM state + a rolling
+window KV cache + static meta-token KV, so the long_500k shape is served
+with a constant-size working set.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import _dense_init
+from repro.models.xlstm import _causal_conv
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(16, cfg.d_model // 16)
+
+
+def _init_block(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    r = _dt_rank(cfg)
+    ks = jax.random.split(key, 10)
+    p = {
+        "norm": L.init_rmsnorm(d),
+        "attn": L.init_attention(ks[0], cfg),
+        # mamba branch
+        "w_xz": _dense_init(ks[1], (d, 2, d_in), d),
+        "conv": _dense_init(ks[2], (cfg.ssm_conv, d_in), cfg.ssm_conv),
+        "w_bc": _dense_init(ks[3], (d_in, 2 * N), d_in),
+        "w_dt_down": _dense_init(ks[4], (d_in, r), d_in),
+        "w_dt_up": _dense_init(ks[5], (r, d_in), r),
+        "b_dt": jnp.log(jnp.expm1(jnp.full((d_in,), 0.01))),  # softplus^-1
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (d_in, N))
+        ),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "w_ssm_out": _dense_init(ks[6], (d_in, d), d_in),
+        # branch fusion
+        "attn_out_norm": L.init_rmsnorm(d),
+        "ssm_out_norm": L.init_rmsnorm(d),
+        "beta_attn": jnp.ones((), jnp.float32),
+        "beta_ssm": jnp.ones((), jnp.float32),
+        # ffn
+        "mlp_norm": L.init_rmsnorm(d),
+        "mlp": L.init_mlp(ks[7], d, cfg.d_ff),
+    }
+    return p
+
+
+def init(rng, cfg: ModelConfig) -> dict:
+    k_e, k_b = jax.random.split(rng)
+    ks = jax.random.split(k_b, cfg.num_layers)
+    return {
+        "embed": L.init_embed(k_e, cfg),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "blocks": jax.vmap(partial(_init_block, cfg=cfg))(ks),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mamba branch
+# ---------------------------------------------------------------------------
+
+
+def _ssm_inputs(bp, cfg: ModelConfig, xn):
+    """Shared preprocessing for seq scan and single-step decode.
+
+    xn: (B, S, d) -> u (conv'd, gated input), z gate, dt, B_t, C_t.
+    """
+    dt_ = xn.dtype
+    xz = jnp.einsum("bsd,dtf->bstf", xn, bp["w_xz"].astype(dt_))
+    x_in, z = xz[..., 0, :], xz[..., 1, :]
+    return x_in, z
+
+
+def _ssm_params(bp, u):
+    """u: (B, S, d_in) post-conv. Returns dt, Bt, Ct (f32)."""
+    N = bp["A_log"].shape[1]
+    bc = jnp.einsum("bsf,fn->bsn", u, bp["w_bc"].astype(u.dtype)).astype(jnp.float32)
+    Bt, Ct = bc[..., :N], bc[..., N:]
+    dt = jnp.einsum(
+        "bsf,fr,rg->bsg", u, bp["w_dt_down"].astype(u.dtype),
+        bp["w_dt_up"].astype(u.dtype),
+    ).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + bp["b_dt"])
+    return dt, Bt, Ct
+
+
+def mamba_seq(bp, cfg: ModelConfig, xn, conv_state=None, ssm_state=None):
+    """xn: (B, S, d). Returns (y (B, S, d), (conv_state, ssm_state))."""
+    B, S, d = xn.shape
+    x_in, z = _ssm_inputs(bp, cfg, xn)
+    if conv_state is not None:  # decode-style continuation
+        x_cat = jnp.concatenate([conv_state.astype(x_in.dtype), x_in], axis=1)
+        u = jax.nn.silu(_causal_conv(x_cat, bp["conv"]))[:, conv_state.shape[1] :]
+    else:
+        u = jax.nn.silu(_causal_conv(x_in, bp["conv"]))
+    dt, Bt, Ct = _ssm_params(bp, u)
+    A = -jnp.exp(bp["A_log"])  # (d_in, N)
+    u32 = u.astype(jnp.float32)
+    dA = jnp.exp(dt[..., None] * A)  # (B, S, d_in, N)
+    dBu = dt[..., None] * Bt[:, :, None, :] * u32[..., None]
+
+    if ssm_state is None:
+        ssm_state = jnp.zeros((B, u.shape[-1], A.shape[1]), jnp.float32)
+    # fold the initial state into the first step
+    dBu = dBu.at[:, 0].add(dA[:, 0] * ssm_state)
+
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (dA, dBu), axis=1)  # (B,S,d_in,N)
+    y = jnp.einsum("bsfn,bsn->bsf", h, Ct) + bp["D"] * u32
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(xn.dtype)
+    out = jnp.einsum("bsf,fd->bsd", y, bp["w_ssm_out"].astype(xn.dtype))
+    kc = cfg.ssm_conv - 1
+    if S >= kc:
+        new_conv_state = x_in[:, -kc:]
+    else:
+        new_conv_state = jnp.pad(x_in, ((0, 0), (kc - S, 0), (0, 0)))
+    return out, (new_conv_state, h[:, -1])
+
+
+def mamba_step(bp, cfg: ModelConfig, xn, conv_state, ssm_state):
+    """One-token decode. xn: (B, 1, d); conv_state (B, k-1, d_in)."""
+    x_in, z = _ssm_inputs(bp, cfg, xn)  # (B,1,d_in)
+    x_cat = jnp.concatenate([conv_state.astype(x_in.dtype), x_in], axis=1)
+    u = jax.nn.silu(
+        jnp.einsum("bkf,kf->bf", x_cat, bp["conv"].astype(x_in.dtype))
+    )[:, None]
+    dt, Bt, Ct = _ssm_params(bp, u)
+    A = -jnp.exp(bp["A_log"])
+    u32 = u.astype(jnp.float32)
+    dA = jnp.exp(dt[:, 0, :, None] * A)  # (B, d_in, N)
+    dBu = dt[:, 0, :, None] * Bt[:, 0, None, :] * u32[:, 0, :, None]
+    h = dA * ssm_state + dBu
+    y = jnp.einsum("bfn,bn->bf", h, Ct[:, 0]) + bp["D"] * u32[:, 0]
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(xn.dtype)
+    out = jnp.einsum("bf,fd->bd", y, bp["w_ssm_out"].astype(xn.dtype))[:, None]
+    new_conv = jnp.concatenate([conv_state[:, 1:], x_in.astype(conv_state.dtype)], axis=1)
+    return out, (new_conv, h)
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def _block_fwd(x, bp, cfg: ModelConfig, positions):
+    xn = L.rmsnorm(x, bp["norm"], cfg.norm_eps)
+    # attention branch (sliding window + globally-visible meta prefix)
+    q, k, v = L._qkv(xn, bp["attn"], cfg, positions)
+    S = x.shape[1]
+    attn_fn = L.chunked_attention if S > L.ATTN_CHUNK_THRESHOLD else L.full_attention
+    a = attn_fn(
+        q, k, v, causal=True, sliding_window=cfg.sliding_window,
+        prefix_global=cfg.meta_tokens,
+    )
+    a = jnp.einsum("bshk,hkd->bsd", a, bp["attn"]["wo"].astype(x.dtype))
+    # mamba branch
+    s, _ = mamba_seq(bp, cfg, xn)
+    fused = (
+        bp["beta_attn"] * L.rmsnorm(a, bp["attn_out_norm"], cfg.norm_eps)
+        + bp["beta_ssm"] * L.rmsnorm(s, bp["ssm_out_norm"], cfg.norm_eps)
+    ) * 0.5
+    h = x + fused.astype(x.dtype)
+    y = L.swiglu(L.rmsnorm(h, bp["mlp_norm"], cfg.norm_eps), bp["mlp"])
+    return h + y
+
+
+def forward(params, cfg: ModelConfig, batch, *, use_pallas: bool = False):
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    dt = jnp.dtype(cfg.dtype)
+    x = L.embed_tokens(params["embed"], cfg, tokens)
+    if cfg.meta_tokens:
+        meta = jnp.broadcast_to(
+            params["embed"]["meta"].astype(dt), (B, cfg.meta_tokens, cfg.d_model)
+        )
+        x = jnp.concatenate([meta, x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def step(x, bp):
+        return _block_fwd(x, bp, cfg, positions), None
+
+    x, _ = lax.scan(step, x, params["blocks"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_head(params["embed"], cfg, x)
+    return logits, {"aux_loss": jnp.float32(0.0)}
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, use_pallas: bool = False):
+    logits, _ = forward(params, cfg, batch)
+    labels = batch["labels"]
+    if cfg.meta_tokens:
+        pad = jnp.full((labels.shape[0], cfg.meta_tokens), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    ce = L.cross_entropy(logits[:, :-1], labels[:, 1:])
+    return ce, {"ce": ce, "aux_loss": jnp.float32(0.0)}
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg: ModelConfig, batch, cache_len: int, *,
+            use_pallas: bool = False):
+    """Prompt pass building window KV + meta-token KV + SSM states."""
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    dt = jnp.dtype(cfg.dtype)
+    x = L.embed_tokens(params["embed"], cfg, tokens)
+    if cfg.meta_tokens:
+        meta = jnp.broadcast_to(
+            params["embed"]["meta"].astype(dt), (B, cfg.meta_tokens, cfg.d_model)
+        )
+        x = jnp.concatenate([meta, x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    W = min(cfg.sliding_window or cache_len, max(cache_len, 1))
+
+    def place(kv):  # last W positions, left-padded
+        if S >= W:
+            return kv[:, S - W:]
+        return jnp.pad(kv, ((0, 0), (W - S, 0), (0, 0), (0, 0)))
+
+    def step(x, bp):
+        xn = L.rmsnorm(x, bp["norm"], cfg.norm_eps)
+        q, k, v = L._qkv(xn, bp["attn"], cfg, positions)
+        attn_fn = (
+            L.chunked_attention if S > L.ATTN_CHUNK_THRESHOLD else L.full_attention
+        )
+        a = attn_fn(q, k, v, causal=True, sliding_window=cfg.sliding_window,
+                    prefix_global=cfg.meta_tokens)
+        a = jnp.einsum("bshk,hkd->bsd", a, bp["attn"]["wo"].astype(x.dtype))
+        s_out, (conv_s, ssm_s) = mamba_seq(bp, cfg, xn)
+        fused = (
+            bp["beta_attn"] * L.rmsnorm(a, bp["attn_out_norm"], cfg.norm_eps)
+            + bp["beta_ssm"] * L.rmsnorm(s_out, bp["ssm_out_norm"], cfg.norm_eps)
+        ) * 0.5
+        h = x + fused.astype(x.dtype)
+        y = L.swiglu(L.rmsnorm(h, bp["mlp_norm"], cfg.norm_eps), bp["mlp"])
+        caps = (
+            place(k).astype(dt), place(v).astype(dt),
+            k[:, : cfg.meta_tokens].astype(dt), v[:, : cfg.meta_tokens].astype(dt),
+            conv_s.astype(dt), ssm_s,
+        )
+        return h + y, caps
+
+    x, (k_w, v_w, k_m, v_m, conv_all, ssm_all) = lax.scan(
+        step, x, params["blocks"]
+    )
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_head(params["embed"], cfg, x)[:, -1]
+    cache = {
+        "k": k_w, "v": v_w, "k_meta": k_m, "v_meta": v_m,
+        "conv": conv_all, "ssm": ssm_all,
+        "pos": jnp.asarray(S, jnp.int32),
+    }
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=None) -> dict:
+    """Rolling-window KV + meta-token KV + O(1) mamba state per layer.
+
+    Total size is O(window + meta), NOT O(seq_len): this is what makes
+    long_500k feasible for the hybrid family.
+    """
+    dt = jnp.dtype(dtype or cfg.dtype)
+    Lyr = cfg.num_layers
+    W = min(cfg.sliding_window or seq_len, seq_len)
+    d_in = cfg.ssm_expand * cfg.d_model
+    kv = (Lyr, batch, W, cfg.num_kv_heads, cfg.head_dim)
+    meta_kv = (Lyr, batch, cfg.meta_tokens, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(kv, dt),
+        "v": jnp.zeros(kv, dt),
+        "k_meta": jnp.zeros(meta_kv, dt),
+        "v_meta": jnp.zeros(meta_kv, dt),
+        "conv": jnp.zeros((Lyr, batch, cfg.ssm_conv - 1, d_in), dt),
+        "ssm": jnp.zeros((Lyr, batch, d_in, cfg.ssm_state), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, *, use_pallas: bool = False):
+    """tokens: (B,). Window cache is shifted left one slot per step."""
+    import math as _math
+
+    pos = cache["pos"]  # absolute position of the new token
+    B = tokens.shape[0]
+    dt = jnp.dtype(cfg.dtype)
+    W = cache["k"].shape[2]
+    x = L.embed_tokens(params["embed"], cfg, tokens[:, None])
+
+    def step(x, inp):
+        bp, kc, vc, km, vm, conv_s, ssm_s = inp
+        xn = L.rmsnorm(x, bp["norm"], cfg.norm_eps)
+        q, k_new, v_new = L._qkv(xn, bp["attn"], cfg, pos[None])
+        kc = jnp.concatenate([kc[:, 1:], k_new.astype(kc.dtype)], axis=1)
+        vc = jnp.concatenate([vc[:, 1:], v_new.astype(vc.dtype)], axis=1)
+        # window positions: pos-W+1 .. pos ; meta tokens at 0..m-1
+        kk = jnp.concatenate([km, kc], axis=1).astype(q.dtype)
+        vv = jnp.concatenate([vm, vc], axis=1).astype(q.dtype)
+        n_rep = cfg.num_heads // cfg.num_kv_heads
+        kk, vv = L._expand_kv(kk, n_rep), L._expand_kv(vv, n_rep)
+        s = jnp.einsum("bqhk,bshk->bhqs", q, kk).astype(jnp.float32)
+        s = s / _math.sqrt(cfg.head_dim)
+        win_pos = pos - W + 1 + jnp.arange(W)
+        valid = jnp.concatenate(
+            [jnp.ones((cfg.meta_tokens,), bool), win_pos >= cfg.meta_tokens], 0
+        )
+        s = jnp.where(valid[None, None, None, :], s, -1e30)
+        prob = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        a = jnp.einsum("bhqs,bshk->bqhk", prob, vv)
+        a = jnp.einsum("bshk,hkd->bsd", a, bp["attn"]["wo"].astype(x.dtype))
+        m_out, (conv_s, ssm_s) = mamba_step(bp, cfg, xn, conv_s, ssm_s)
+        fused = (
+            bp["beta_attn"] * L.rmsnorm(a, bp["attn_out_norm"], cfg.norm_eps)
+            + bp["beta_ssm"] * L.rmsnorm(m_out, bp["ssm_out_norm"], cfg.norm_eps)
+        ) * 0.5
+        h = x + fused.astype(x.dtype)
+        y = L.swiglu(L.rmsnorm(h, bp["mlp_norm"], cfg.norm_eps), bp["mlp"])
+        return h + y, (kc, vc, conv_s, ssm_s)
+
+    x, (k_all, v_all, conv_all, ssm_all) = lax.scan(
+        step,
+        x,
+        (
+            params["blocks"],
+            cache["k"],
+            cache["v"],
+            cache["k_meta"],
+            cache["v_meta"],
+            cache["conv"],
+            cache["ssm"],
+        ),
+    )
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_head(params["embed"], cfg, x)[:, 0]
+    new_cache = dict(
+        cache, k=k_all, v=v_all, conv=conv_all, ssm=ssm_all, pos=pos + 1
+    )
+    return logits, new_cache

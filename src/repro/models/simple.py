@@ -1,0 +1,99 @@
+"""Small models for the paper-faithful convergence experiments.
+
+The paper's section IV trains 7 CNN families on CIFAR-10. On this CPU-only
+container we reproduce the *claims* (momentum accelerates K-AVG; optimal mu
+grows with P; optimal K > 1) with the same optimizer code on CPU-feasible
+models: an MLP, a small CNN (the CIFAR-10 stand-in) and the tiny
+transformer from the assigned pool. Batches are {'x': features, 'y': int
+labels} from the teacher stream in repro/data/synthetic.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import _dense_init, cross_entropy
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(rng, d_in: int, hidden: int, classes: int, depth: int = 2):
+    ks = jax.random.split(rng, depth + 1)
+    params = {"in": _dense_init(ks[0], (d_in, hidden), d_in)}
+    for i in range(depth - 1):
+        params[f"h{i}"] = _dense_init(ks[i + 1], (hidden, hidden), hidden)
+    params["out"] = _dense_init(ks[-1], (hidden, classes), hidden)
+    params["b_out"] = jnp.zeros((classes,))
+    return params
+
+
+def mlp_forward(params, x):
+    h = jnp.tanh(x @ params["in"])
+    i = 0
+    while f"h{i}" in params:
+        h = jnp.tanh(h @ params[f"h{i}"])
+        i += 1
+    return h @ params["out"] + params["b_out"]
+
+
+def mlp_loss(params, batch):
+    logits = mlp_forward(params, batch["x"])
+    loss = cross_entropy(logits, batch["y"])
+    return loss, {"logits": logits}
+
+
+def mlp_accuracy(params, batch):
+    logits = mlp_forward(params, batch["x"])
+    return jnp.mean(jnp.argmax(logits, -1) == batch["y"])
+
+
+# ---------------------------------------------------------------------------
+# small CNN (CIFAR-shaped stand-in; batch['x'] is (B, H, W, C))
+# ---------------------------------------------------------------------------
+
+
+def cnn_init(rng, hw: int = 16, channels: int = 3, width: int = 16,
+             classes: int = 10):
+    ks = jax.random.split(rng, 4)
+    flat = (hw // 4) * (hw // 4) * (2 * width)
+    return {
+        "c1": _dense_init(ks[0], (3, 3, channels, width), 9 * channels),
+        "c2": _dense_init(ks[1], (3, 3, width, 2 * width), 9 * width),
+        "out": _dense_init(ks[2], (flat, classes), flat),
+        "b_out": jnp.zeros((classes,)),
+    }
+
+
+def _conv(x, w):
+    return lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _pool2(x):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cnn_forward(params, x):
+    h = jax.nn.relu(_conv(x, params["c1"]))
+    h = _pool2(h)
+    h = jax.nn.relu(_conv(h, params["c2"]))
+    h = _pool2(h)
+    h = h.reshape(h.shape[0], -1)
+    return h @ params["out"] + params["b_out"]
+
+
+def cnn_loss(params, batch):
+    logits = cnn_forward(params, batch["x"])
+    return cross_entropy(logits, batch["y"]), {}
+
+
+def cnn_accuracy(params, batch):
+    logits = cnn_forward(params, batch["x"])
+    return jnp.mean(jnp.argmax(logits, -1) == batch["y"])

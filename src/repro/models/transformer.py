@@ -1,0 +1,333 @@
+"""Decoder/encoder transformer covering the dense, moe, audio and vlm
+families (GQA, RoPE, qk-norm, QKV-bias, tied embeddings, MoE layers,
+sliding-window attention, stub modality frontends).
+
+Layer stacks are scanned over a leading layer axis. MoE configs with
+``first_dense_layers`` keep a separate (small) stack for the leading dense
+blocks, matching DeepSeekMoE / Kimi-K2.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.moe import init_moe, moe_layer
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ModelConfig, moe: bool) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn_norm": L.init_rmsnorm(cfg.d_model),
+        "attn": L.init_attention(k1, cfg),
+        "mlp_norm": L.init_rmsnorm(cfg.d_model),
+    }
+    if moe:
+        p["moe"] = init_moe(k2, cfg)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _stack(init_fn, key, n):
+    ks = jax.random.split(key, n)
+    return jax.vmap(init_fn)(ks)
+
+
+def init(rng, cfg: ModelConfig) -> dict:
+    k_embed, k_dense, k_moe, k_blocks = jax.random.split(rng, 4)
+    params = {"embed": L.init_embed(k_embed, cfg), "final_norm": L.init_rmsnorm(cfg.d_model)}
+    if cfg.num_experts:
+        nd = cfg.first_dense_layers
+        if nd:
+            params["dense_blocks"] = _stack(
+                partial(_init_block, cfg=cfg, moe=False), k_dense, nd
+            )
+        params["blocks"] = _stack(
+            partial(_init_block, cfg=cfg, moe=True), k_moe, cfg.num_layers - nd
+        )
+    else:
+        params["blocks"] = _stack(
+            partial(_init_block, cfg=cfg, moe=False), k_blocks, cfg.num_layers
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+# Activation-checkpoint policy for the layer scan. 'nothing_saveable' is the
+# memory-min baseline (recompute everything); perf iteration 4 switches to
+# 'dots_with_no_batch_dims_saveable' which keeps matmul outputs and avoids
+# one full recompute pass (fewer FSDP weight re-gathers, useful_ratio -> 1).
+REMAT_POLICY = jax.checkpoint_policies.nothing_saveable
+
+
+def set_remat_policy(name: str) -> None:
+    global REMAT_POLICY
+    REMAT_POLICY = {
+        "full": jax.checkpoint_policies.nothing_saveable,
+        "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        "everything": jax.checkpoint_policies.everything_saveable,
+    }[name]
+
+
+def _block_fwd(x, bp, cfg: ModelConfig, positions, moe: bool, use_pallas: bool):
+    h = x + L.attention_block(
+        L.rmsnorm(x, bp["attn_norm"], cfg.norm_eps), bp["attn"], cfg, positions,
+        use_pallas=use_pallas,
+    )
+    hn = L.rmsnorm(h, bp["mlp_norm"], cfg.norm_eps)
+    if moe:
+        y, aux = moe_layer(hn, bp["moe"], cfg)
+    else:
+        y, aux = L.swiglu(hn, bp["mlp"]), jnp.float32(0.0)
+    return h + y, aux
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch):
+    """Returns (x (B,S,d), loss_mask (B,S) or None)."""
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.input_mode == "tokens":
+        x = L.embed_tokens(params["embed"], cfg, batch["tokens"])
+        mask = None
+    elif cfg.input_mode == "embeddings":  # audio: precomputed frames (stub)
+        x = batch["embeddings"].astype(dt)
+        mask = None
+    elif cfg.input_mode == "tokens+patches":  # vlm: patch embeds + text
+        patches = batch["patches"].astype(dt) + params["embed"]["patch_pos"].astype(dt)
+        text = L.embed_tokens(params["embed"], cfg, batch["tokens"])
+        x = jnp.concatenate([patches, text], axis=1)
+        B, P = patches.shape[:2]
+        mask = jnp.concatenate(
+            [jnp.zeros((B, P), bool), jnp.ones((B, text.shape[1]), bool)], axis=1
+        )
+    else:
+        raise ValueError(cfg.input_mode)
+    if cfg.meta_tokens:
+        B = x.shape[0]
+        meta = jnp.broadcast_to(
+            params["embed"]["meta"].astype(dt), (B, cfg.meta_tokens, cfg.d_model)
+        )
+        x = jnp.concatenate([meta, x], axis=1)
+        if mask is not None:
+            mask = jnp.concatenate(
+                [jnp.zeros((B, cfg.meta_tokens), bool), mask], axis=1
+            )
+    return x, mask
+
+
+def forward(params, cfg: ModelConfig, batch, *, use_pallas: bool = False):
+    """-> (logits (B, S_total, V) f32, aux dict)."""
+    x, mask = _embed_inputs(params, cfg, batch)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    aux_total = jnp.float32(0.0)
+
+    def scan_blocks(x, stack, moe):
+        # remat each block: activation memory for 126-layer x 4k-seq configs
+        # would otherwise be stored per scan iteration for the backward pass
+        @partial(jax.checkpoint, policy=REMAT_POLICY)
+        def step(carry, bp):
+            x, aux = carry
+            x, a = _block_fwd(x, bp, cfg, positions, moe, use_pallas)
+            return (x, aux + a), None
+
+        (x, aux), _ = lax.scan(step, (x, jnp.float32(0.0)), stack)
+        return x, aux
+
+    if "dense_blocks" in params:
+        x, a = scan_blocks(x, params["dense_blocks"], moe=False)
+        aux_total += a
+    x, a = scan_blocks(x, params["blocks"], moe=cfg.num_experts > 0)
+    aux_total += a
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_head(params["embed"], cfg, x)
+    return logits, {"aux_loss": aux_total, "prefix_mask": mask}
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, use_pallas: bool = False):
+    """Causal-LM loss (next-token) or masked-prediction loss (encoder)."""
+    logits, aux = forward(params, cfg, batch, use_pallas=use_pallas)
+    labels = batch["labels"]
+    if cfg.is_encoder_only:
+        # masked prediction at positions given by labels>=0 (hubert-style)
+        ce = L.cross_entropy(logits, labels)
+    else:
+        # align: prefix tokens (patches/meta) carry no labels
+        S_total = logits.shape[1]
+        S_lab = labels.shape[1]
+        pad = S_total - S_lab
+        if pad:
+            labels = jnp.concatenate(
+                [jnp.full((labels.shape[0], pad), -1, labels.dtype), labels], axis=1
+            )
+        ce = L.cross_entropy(logits[:, :-1], labels[:, 1:])
+    total = ce + aux["aux_loss"]
+    return total, {"ce": ce, "aux_loss": aux["aux_loss"]}
+
+
+# ---------------------------------------------------------------------------
+# prefill: forward pass that also builds the KV cache
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg: ModelConfig, batch, cache_len: int, *,
+            use_pallas: bool = False):
+    """Process a full prompt, returning (last-position logits, cache).
+
+    The cache is laid out exactly as decode_step expects: full-length
+    with pos = S for full-attention configs; rolling window-aligned for
+    sliding-window configs (latest token in the last slot).
+    """
+    x, _ = _embed_inputs(params, cfg, batch)
+    B, S = x.shape[:2]
+    positions = jnp.arange(S)
+    W = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+    dt = jnp.dtype(cfg.dtype)
+
+    def place(kv):  # (B, S, nkv, hd) -> cache slab (B, W or cache_len, ...)
+        if cfg.sliding_window:
+            if S >= W:
+                return kv[:, S - W:]
+            return jnp.pad(kv, ((0, 0), (W - S, 0), (0, 0), (0, 0)))
+        return jnp.pad(kv, ((0, 0), (0, cache_len - S), (0, 0), (0, 0)))
+
+    def make_step(moe):
+        def step(x, bp):
+            hn = L.rmsnorm(x, bp["attn_norm"], cfg.norm_eps)
+            a_out, k, v = L.attention_block_kv(
+                hn, bp["attn"], cfg, positions, use_pallas
+            )
+            h = x + a_out
+            hn2 = L.rmsnorm(h, bp["mlp_norm"], cfg.norm_eps)
+            if moe:
+                y, _ = moe_layer(hn2, bp["moe"], cfg)
+            else:
+                y = L.swiglu(hn2, bp["mlp"])
+            return h + y, (place(k).astype(dt), place(v).astype(dt))
+
+        return step
+
+    nd = cfg.first_dense_layers if cfg.num_experts else 0
+    ks, vs = [], []
+    if nd:
+        x, (kd, vd) = lax.scan(make_step(False), x, params["dense_blocks"])
+        ks.append(kd)
+        vs.append(vd)
+    x, (km, vm) = lax.scan(make_step(cfg.num_experts > 0), x, params["blocks"])
+    ks.append(km)
+    vs.append(vm)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_head(params["embed"], cfg, x)[:, -1]
+    cache = {
+        "k": jnp.concatenate(ks, axis=0) if len(ks) > 1 else ks[0],
+        "v": jnp.concatenate(vs, axis=0) if len(vs) > 1 else vs[0],
+        "pos": jnp.asarray(S, jnp.int32),
+    }
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# decode (serve)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=None) -> dict:
+    """KV cache. Sliding-window configs keep a rolling window-sized cache
+    (O(window), not O(seq)) — this is what makes the sliding-window serve
+    variant viable at 524k context."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    S = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    shape = (cfg.num_layers, batch, S, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, *, use_pallas: bool = False):
+    """One decode step. tokens: (B,) int32. Returns (logits (B,V), cache)."""
+    pos = cache["pos"]
+    x = L.embed_tokens(params["embed"], cfg, tokens[:, None])  # (B,1,d)
+
+    nd = cfg.first_dense_layers if cfg.num_experts else 0
+
+    def make_step(moe):
+        def step(carry, inp):
+            x = carry
+            bp, kc, vc = inp
+            hn = L.rmsnorm(x, bp["attn_norm"], cfg.norm_eps)
+            if cfg.sliding_window and kc.shape[1] <= cfg.sliding_window:
+                a_out, kc, vc = _window_attention_decode(
+                    hn, bp["attn"], cfg, kc, vc, pos
+                )
+            else:
+                a_out, kc, vc = L.attention_decode(hn, bp["attn"], cfg, kc, vc, pos)
+            h = x + a_out
+            hn2 = L.rmsnorm(h, bp["mlp_norm"], cfg.norm_eps)
+            if moe:
+                y, _ = moe_layer(hn2, bp["moe"], cfg)
+            else:
+                y = L.swiglu(hn2, bp["mlp"])
+            return h + y, (kc, vc)
+
+        return step
+
+    k_all, v_all = cache["k"], cache["v"]
+    new_k, new_v = [], []
+    if nd:
+        x, (kd, vd) = lax.scan(
+            make_step(False), x, (params["dense_blocks"], k_all[:nd], v_all[:nd])
+        )
+        new_k.append(kd)
+        new_v.append(vd)
+    x, (km, vm) = lax.scan(
+        make_step(cfg.num_experts > 0), x,
+        (params["blocks"], k_all[nd:], v_all[nd:]),
+    )
+    new_k.append(km)
+    new_v.append(vm)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_head(params["embed"], cfg, x)[:, 0]
+    cache = {
+        "k": jnp.concatenate(new_k, axis=0) if len(new_k) > 1 else new_k[0],
+        "v": jnp.concatenate(new_v, axis=0) if len(new_v) > 1 else new_v[0],
+        "pos": pos + 1,
+    }
+    return logits, cache
+
+
+def _window_attention_decode(x, p, cfg: ModelConfig, kc, vc, pos):
+    """Rolling window-cache decode (shift left, append at the end).
+
+    Keys are roped at their absolute positions when inserted, so the
+    rolling buffer needs no re-rotation.
+    """
+    import math as _math
+
+    q, k_new, v_new = L._qkv(x, p, cfg, pos[None] if pos.ndim == 0 else pos)
+    kc = jnp.concatenate([kc[:, 1:], k_new.astype(kc.dtype)], axis=1)
+    vc = jnp.concatenate([vc[:, 1:], v_new.astype(vc.dtype)], axis=1)
+    W = kc.shape[1]
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    kk = L._expand_kv(kc.astype(q.dtype), n_rep)
+    vv = L._expand_kv(vc.astype(q.dtype), n_rep)
+    s = jnp.einsum("bqhk,bshk->bhqs", q, kk).astype(jnp.float32)
+    s = s / _math.sqrt(cfg.head_dim)
+    win_pos = pos - W + 1 + jnp.arange(W)
+    s = jnp.where((win_pos >= 0)[None, None, None, :], s, -1e30)
+    prob = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqs,bshk->bqhk", prob, vv)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, kc, vc

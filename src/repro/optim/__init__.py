@@ -1,0 +1,2 @@
+from repro.optim.sgd import sgd_apply, msgd_apply, msgd_init
+from repro.optim.schedules import constant, cosine, warmup_cosine

@@ -1,0 +1,26 @@
+"""Step-size schedules for the learner lr (gamma_n in the paper)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine(lr, total_steps, final_frac=0.1):
+    def f(step):
+        t = jnp.minimum(step / max(1, total_steps), 1.0)
+        return jnp.float32(lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))))
+
+    return f
+
+
+def warmup_cosine(lr, warmup_steps, total_steps, final_frac=0.1):
+    cos = cosine(lr, total_steps, final_frac)
+
+    def f(step):
+        warm = lr * (step + 1) / max(1, warmup_steps)
+        return jnp.where(step < warmup_steps, jnp.float32(warm), cos(step))
+
+    return f

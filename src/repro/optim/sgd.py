@@ -1,0 +1,23 @@
+"""Learner-level optimizers (the paper's inner loop uses plain SGD;
+``mavg_mlocal`` — the paper's section-V future-work variant — uses MSGD)."""
+from __future__ import annotations
+
+import jax
+
+from repro.utils import tree_axpy, tree_zeros_like
+
+
+def sgd_apply(params, grads, lr):
+    """w <- w - lr * g (Algorithm 1 learner update)."""
+    return tree_axpy(-lr, grads, params)
+
+
+def msgd_init(params):
+    return tree_zeros_like(params)
+
+
+def msgd_apply(params, momentum, grads, lr, mu):
+    """Heavy-ball: m <- mu m - lr g; w <- w + m."""
+    momentum = jax.tree.map(lambda m, g: mu * m - lr * g, momentum, grads)
+    params = jax.tree.map(lambda w, m: w + m, params, momentum)
+    return params, momentum

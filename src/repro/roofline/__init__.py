@@ -1,0 +1,9 @@
+from repro.roofline.hlo import collective_bytes, split_computations
+from repro.roofline.terms import (
+    HBM_BW,
+    ICI_LINK_BW,
+    PEAK_FLOPS_BF16,
+    RooflineTerms,
+    compute_terms,
+    model_flops,
+)

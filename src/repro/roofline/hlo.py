@@ -1,0 +1,136 @@
+"""Collective-byte accounting from optimized HLO text.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but not
+collective traffic, so we parse ``compiled.as_text()``: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+instruction contributes its result bytes, and instructions living inside
+``while`` bodies (scan over layers, scan over K local steps) are
+multiplied by the loop trip count. Trip counts are recovered from the
+loop-condition computation (the comparison constant) — the standard
+lax.scan lowering — with a fallback of 1.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)"
+)
+_CALL_RE = re.compile(r"(?:call|fusion)\(.*?\).*?(?:to_apply|calls)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO result type (handles tuples)."""
+    total = 0
+    for dtype, dims in _ARRAY_RE.findall(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def split_computations(hlo: str):
+    """Returns (computation name -> instruction lines, entry name)."""
+    comps: dict[str, list[str]] = {}
+    current = None
+    entry = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        is_header = (
+            not line.startswith(" ")
+            and stripped.endswith("{")
+            and "->" in stripped
+        )
+        if is_header:
+            head = stripped
+            if head.startswith("ENTRY"):
+                head = head[len("ENTRY"):].strip()
+            name = head.split("(")[0].strip().lstrip("%").strip()
+            current = name
+            comps.setdefault(current, [])
+            if stripped.startswith("ENTRY"):
+                entry = name
+            continue
+        if stripped == "}":
+            continue
+        if current is not None:
+            comps[current].append(stripped)
+    return comps, entry
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Largest integer constant in the loop condition (scan bound)."""
+    best = 1
+    for line in cond_lines:
+        for c in _CONST_RE.findall(line):
+            best = max(best, int(c))
+    return best
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Returns {'total': bytes, 'by_type': {...}, 'by_site': [...]}.
+
+    Bytes are the *result* sizes of collective ops, trip-count weighted.
+    """
+    comps, entry = split_computations(hlo)
+    if entry is None:  # single-computation module
+        entry = next(iter(comps)) if comps else None
+    if entry is None:
+        return {"total": 0, "by_type": {}, "sites": []}
+
+    by_type: dict[str, int] = defaultdict(int)
+    sites = []
+
+    def walk(comp: str, multiplier: int, seen: tuple):
+        if comp not in comps or comp in seen:
+            return
+        for line in comps[comp]:
+            # collectives: "%name = TYPE op-name(...)"
+            for cname in COLLECTIVES:
+                token = f" {cname}("
+                alt = f" {cname}-start("
+                if token in line or alt in line:
+                    lhs = line.split("=", 1)
+                    type_str = lhs[1] if len(lhs) > 1 else line
+                    type_str = type_str.split(cname)[0]
+                    b = _shape_bytes(type_str) * multiplier
+                    by_type[cname] += b
+                    sites.append({"op": cname, "bytes": b, "comp": comp})
+                    break
+            m = _WHILE_RE.search(line)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                walk(body, multiplier * trips, seen + (comp,))
+                continue
+            m = _CALL_RE.search(line)
+            if m and not line.lstrip().startswith("ROOT fusion"):
+                walk(m.group(1), multiplier, seen + (comp,))
+
+    walk(entry, 1, ())
+    return {"total": sum(by_type.values()), "by_type": dict(by_type), "sites": sites}

@@ -1,0 +1,88 @@
+"""Three-term roofline model for TPU v5e (target hardware).
+
+    compute    = HLO_FLOPs        / (chips x peak_FLOP/s)
+    memory     = HLO_bytes        / (chips x HBM_bw)
+    collective = collective_bytes / (chips x link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (whole-program
+totals, per the SPMD single-program view); collective bytes come from the
+HLO parser in hlo.py. MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE) is
+the useful-work yardstick: HLO/MODEL ratio exposes remat recompute and
+redundancy.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+
+from repro.configs.base import InputShape, ModelConfig
+
+# TPU v5e per-chip constants (from the spec)
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_LINK_BW = 50e9  # B/s per link
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    useful_ratio: float  # MODEL_FLOPS / HLO_FLOPs
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape, k_steps: int = 1) -> float:
+    """6 N D per processed token (training) or 2 N D (inference forward)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len * k_steps
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def compute_terms(*, arch: str, shape: InputShape, mesh_name: str, chips: int,
+                  hlo_flops: float, hlo_bytes: float, collective_bytes: float,
+                  cfg: ModelConfig, k_steps: int = 1,
+                  per_device: bool = True) -> RooflineTerms:
+    """per_device=True: the HLO numbers come from the SPMD-partitioned
+    module, i.e. they are already per-chip (this is what
+    ``compiled.as_text()`` exposes). The spec formula X/(chips*rate) with
+    whole-program X is identical to X_per_device/rate."""
+    mf = model_flops(cfg, shape, k_steps)
+    div = 1 if per_device else chips
+    compute_s = hlo_flops / (div * PEAK_FLOPS_BF16)
+    memory_s = hlo_bytes / (div * HBM_BW)
+    collective_s = collective_bytes / (div * ICI_LINK_BW)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf_dev = mf / chips if per_device else mf
+    return RooflineTerms(
+        arch=arch,
+        shape=shape.name,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops=hlo_flops,
+        hlo_bytes=hlo_bytes,
+        collective_bytes=collective_bytes,
+        model_flops=mf,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        useful_ratio=mf_dev / hlo_flops if hlo_flops else 0.0,
+    )

@@ -1,0 +1,6 @@
+from repro.sharding.rules import (
+    add_learner_axis,
+    leaf_spec,
+    make_param_specs,
+    named,
+)

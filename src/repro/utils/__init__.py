@@ -1,0 +1,14 @@
+from repro.utils.tree import (
+    tree_zeros_like,
+    tree_add,
+    tree_scale,
+    tree_sub,
+    tree_axpy,
+    tree_dot,
+    tree_norm,
+    tree_size,
+    tree_cast,
+    tree_mean_axis0,
+    tree_broadcast_learners,
+    tree_slice_learner,
+)

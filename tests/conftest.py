@@ -1,0 +1,5 @@
+import jax
+
+# Tests run on the single CPU device; the dry-run (and only the dry-run)
+# sets the 512-device host platform in its own process.
+jax.config.update("jax_enable_x64", False)

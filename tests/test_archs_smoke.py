@@ -1,0 +1,92 @@
+"""Per-architecture smoke tests (spec deliverable f).
+
+For each of the 10 assigned architectures: instantiate the REDUCED variant
+(2 layers, d_model <= 256, <= 4 experts), run one forward/train step on
+CPU, assert output shapes and absence of NaNs; run one decode step where
+the family supports decoding.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import MAvgConfig
+from repro.core import init_state, make_meta_step
+from repro.models import (
+    decode_step,
+    init_cache,
+    init_params,
+    loss_fn,
+    make_batch,
+    prefill,
+)
+
+RNG = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch_setup(request):
+    cfg = get_config(request.param).reduced()
+    params = init_params(RNG, cfg)
+    return request.param, cfg, params
+
+
+def test_reduced_config_limits(arch_setup):
+    _, cfg, _ = arch_setup
+    assert cfg.num_layers == 2
+    assert cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+
+
+def test_forward_loss(arch_setup):
+    arch, cfg, params = arch_setup
+    batch = make_batch(RNG, cfg, 2, 32)
+    loss, metrics = jax.jit(lambda p, b: loss_fn(p, cfg, b))(params, batch)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), arch
+    assert jnp.isfinite(metrics["ce"])
+
+
+def test_train_step_mavg(arch_setup):
+    """One full M-AVG meta step (2 learners x 2 local steps)."""
+    arch, cfg, params = arch_setup
+    mcfg = MAvgConfig(algorithm="mavg", num_learners=2, k_steps=2,
+                      learner_lr=0.05, momentum=0.5)
+    state = init_state(params, mcfg)
+    step = jax.jit(make_meta_step(lambda p, b: loss_fn(p, cfg, b), mcfg))
+    one = make_batch(RNG, cfg, 2, 32)
+    batches = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None, None], (2, 2) + x.shape), one
+    )
+    state, metrics = step(state, batches)
+    assert jnp.isfinite(metrics["loss"]), arch
+    assert jnp.isfinite(metrics["v_norm"])
+    assert int(state.step) == 1
+    for leaf in jax.tree.leaves(state.global_params):
+        assert jnp.isfinite(leaf).all(), arch
+
+
+def test_decode_step(arch_setup):
+    arch, cfg, params = arch_setup
+    if not cfg.supports_decode:
+        pytest.skip("encoder-only: no decode (recorded in DESIGN.md)")
+    cache = init_cache(cfg, 2, 48)
+    toks = jnp.array([1, 2], jnp.int32)
+    logits, cache2 = jax.jit(
+        lambda p, c, t: decode_step(p, cfg, c, t)
+    )(params, cache, toks)
+    assert logits.shape == (2, cfg.vocab_size)
+    assert jnp.isfinite(logits).all(), arch
+    assert int(cache2["pos"]) == 1
+
+
+def test_prefill_shapes(arch_setup):
+    arch, cfg, params = arch_setup
+    if not cfg.supports_decode or cfg.input_mode != "tokens":
+        pytest.skip("prefill test targets token decoders")
+    toks = jax.random.randint(RNG, (2, 16), 0, cfg.vocab_size, jnp.int32)
+    logits, cache = jax.jit(
+        lambda p, b: prefill(p, cfg, b, 48)
+    )(params, {"tokens": toks})
+    assert logits.shape == (2, cfg.vocab_size)
+    assert jnp.isfinite(logits).all(), arch

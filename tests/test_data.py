@@ -1,0 +1,65 @@
+"""Data-pipeline tests: determinism, learner-disjointness, learnability."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import (
+    bigram_table,
+    classif_batch_fn,
+    classif_eval_set,
+    lm_batch_fn,
+    sample_lm,
+)
+
+
+def test_bigram_table_stochastic():
+    t = bigram_table(3, 64)
+    np.testing.assert_allclose(np.asarray(t.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_lm_batches_deterministic():
+    cfg = get_config("qwen3-1.7b").reduced()
+    bf = lm_batch_fn(cfg, 2, 2, 4, 16)
+    rng = jax.random.PRNGKey(0)
+    a = bf(rng, 0)
+    b = bf(rng, 0)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+
+
+def test_lm_learners_disjoint():
+    cfg = get_config("qwen3-1.7b").reduced()
+    bf = lm_batch_fn(cfg, 2, 1, 8, 32)
+    b = bf(jax.random.PRNGKey(0), 0)
+    assert not np.array_equal(
+        np.asarray(b["tokens"][0]), np.asarray(b["tokens"][1])
+    )
+
+
+def test_bigram_is_learnable():
+    """An oracle using the true bigram table beats uniform by a wide margin
+    — i.e. the stream carries learnable signal for convergence benches."""
+    v = 64
+    table = bigram_table(5, v)
+    toks = sample_lm(jax.random.PRNGKey(1), table, 16, 64)
+    nxt_prob = np.asarray(table)[np.asarray(toks[:, :-1])]
+    ll = np.log(nxt_prob[np.arange(16)[:, None],
+                         np.arange(63)[None, :],
+                         np.asarray(toks[:, 1:])] + 1e-9).mean()
+    uniform = np.log(1.0 / v)
+    assert ll > uniform + 1.0
+
+
+def test_classif_eval_fixed():
+    e1 = classif_eval_set(8, 4)
+    e2 = classif_eval_set(8, 4)
+    np.testing.assert_array_equal(np.asarray(e1["x"]), np.asarray(e2["x"]))
+    # all classes present
+    assert len(np.unique(np.asarray(e1["y"]))) == 4
+
+
+def test_classif_batch_shapes():
+    bf = classif_batch_fn(8, 4, 3, 2, 5)
+    b = bf(jax.random.PRNGKey(0), 0)
+    assert b["x"].shape == (3, 2, 5, 8)
+    assert b["y"].shape == (3, 2, 5)

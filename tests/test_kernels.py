@@ -1,0 +1,139 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
+sweeping shapes and dtypes per the spec."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.RandomState(42)
+
+
+def _tol(dtype):
+    return dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=1e-5, atol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# block momentum (the paper's fused meta update)
+# ---------------------------------------------------------------------------
+
+BM_SHAPES = [(8, 128), (1000,), (33, 7), (513, 130), (3,), (4096,), (2, 3, 5, 7)]
+
+
+@pytest.mark.parametrize("shape", BM_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("nesterov", [False, True])
+def test_block_momentum(shape, dtype, nesterov):
+    w = jnp.asarray(RNG.randn(*shape), dtype)
+    v = jnp.asarray(RNG.randn(*shape), dtype)
+    a = jnp.asarray(RNG.randn(*shape), dtype)
+    w1, v1 = ops.block_momentum(w, v, a, mu=0.7, eta=1.3, nesterov=nesterov)
+    w2, v2 = ref.block_momentum_ref(w, v, a, 0.7, 1.3, nesterov=nesterov)
+    np.testing.assert_allclose(
+        np.asarray(w1, np.float32), np.asarray(w2, np.float32), **_tol(dtype)
+    )
+    np.testing.assert_allclose(
+        np.asarray(v1, np.float32), np.asarray(v2, np.float32), **_tol(dtype)
+    )
+
+
+def test_block_momentum_mu_zero_is_kavg():
+    """mu=0 reduces to plain averaging: w' = a (Remark 2 of the paper)."""
+    w = jnp.asarray(RNG.randn(257), jnp.float32)
+    v = jnp.asarray(RNG.randn(257), jnp.float32)
+    a = jnp.asarray(RNG.randn(257), jnp.float32)
+    w1, v1 = ops.block_momentum(w, v, a, mu=0.0, eta=1.0)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(a), rtol=1e-6, atol=1e-6)
+
+
+def test_block_momentum_tree():
+    tree = {
+        "a": jnp.asarray(RNG.randn(17, 5), jnp.float32),
+        "b": {"c": jnp.asarray(RNG.randn(300), jnp.float32)},
+    }
+    v = jax.tree.map(jnp.zeros_like, tree)
+    avg = jax.tree.map(lambda x: x + 1.0, tree)
+    w1, v1 = ops.block_momentum_tree(tree, v, avg, mu=0.5, eta=1.0)
+    for leaf_w, leaf_orig in zip(jax.tree.leaves(w1), jax.tree.leaves(tree)):
+        np.testing.assert_allclose(
+            np.asarray(leaf_w), np.asarray(leaf_orig) + 1.0, rtol=1e-6
+        )
+
+
+# ---------------------------------------------------------------------------
+# fused local SGD apply
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(777,), (16, 128), (5, 7, 11)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sgd_apply(shape, dtype):
+    w = jnp.asarray(RNG.randn(*shape), dtype)
+    g = jnp.asarray(RNG.randn(*shape), dtype)
+    out = ops.sgd_apply(w, g, 0.37)
+    expect = ref.sgd_apply_ref(w, g, 0.37)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), **_tol(dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FA_CASES = [
+    # (B, S, H, KV, D)
+    (2, 128, 4, 2, 64),
+    (1, 256, 8, 8, 128),
+    (2, 64, 4, 1, 80),   # padded head_dim (hubert-style)
+    (1, 96, 5, 5, 64),   # non-pow2 seq, odd heads (hymba-style)
+    (1, 128, 4, 4, 256), # wide head (xlstm-style)
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_basic(case, causal):
+    B, S, H, KV, D = case
+    q = jnp.asarray(RNG.randn(B, S, H, D), jnp.float32) * 0.3
+    k = jnp.asarray(RNG.randn(B, S, KV, D), jnp.float32) * 0.3
+    v = jnp.asarray(RNG.randn(B, S, KV, D), jnp.float32) * 0.3
+    out = ops.flash_attention(q, k, v, causal=causal)
+    oracle = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(oracle), rtol=2e-3, atol=2e-3
+    )
+
+
+@pytest.mark.parametrize("window,prefix", [(32, 0), (32, 8), (16, 4)])
+def test_flash_attention_window_prefix(window, prefix):
+    B, S, H, KV, D = 2, 128, 4, 2, 64
+    q = jnp.asarray(RNG.randn(B, S, H, D), jnp.float32) * 0.3
+    k = jnp.asarray(RNG.randn(B, S, KV, D), jnp.float32) * 0.3
+    v = jnp.asarray(RNG.randn(B, S, KV, D), jnp.float32) * 0.3
+    out = ops.flash_attention(
+        q, k, v, causal=True, sliding_window=window, prefix_global=prefix
+    )
+    oracle = ref.flash_attention_ref(
+        q, k, v, causal=True, sliding_window=window, prefix_global=prefix
+    )
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(oracle), rtol=2e-3, atol=2e-3
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_flash_attention_bf16(dtype):
+    B, S, H, KV, D = 1, 128, 4, 2, 64
+    q = jnp.asarray(RNG.randn(B, S, H, D), dtype) * 0.3
+    k = jnp.asarray(RNG.randn(B, S, KV, D), dtype) * 0.3
+    v = jnp.asarray(RNG.randn(B, S, KV, D), dtype) * 0.3
+    out = ops.flash_attention(q, k, v, causal=True)
+    oracle = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(oracle, np.float32),
+        rtol=3e-2, atol=3e-2,
+    )

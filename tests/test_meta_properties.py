@@ -1,0 +1,154 @@
+"""Property-based tests (hypothesis) for the meta-optimizer invariants.
+
+System invariants tested:
+  I1  mavg with mu=0 is exactly kavg (Remark 2).
+  I2  sync == mavg with K=1 (alias identity).
+  I3  P identical learners == 1 learner (averaging identity).
+  I4  meta update matches the closed form v<-mu v+d, w<-w+v.
+  I5  kavg with K=1, P=1 == plain SGD.
+  I6  downpour applies nothing during the first tau warmup rounds.
+  I7  block-momentum Pallas kernel == jnp path inside the full meta step.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import MAvgConfig
+from repro.core.meta import init_state, make_meta_step
+from repro.models.simple import mlp_init, mlp_loss
+from repro.utils import tree_axpy, tree_norm, tree_sub
+
+D, C, H = 8, 4, 16
+PARAMS = mlp_init(jax.random.PRNGKey(0), D, H, C)
+
+
+def _batches(seed, L, K, B=4):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (L, K, B, D))
+    y = jax.random.randint(ky, (L, K, B), 0, C)
+    return {"x": x, "y": y}
+
+
+def _run(cfg, batches, n_steps=2, params=PARAMS):
+    state = init_state(params, cfg)
+    step = jax.jit(make_meta_step(mlp_loss, cfg))
+    for i in range(n_steps):
+        state, metrics = step(state, jax.tree.map(lambda a: a + 0 * i, batches))
+    return state
+
+
+def _close(a, b, tol=1e-5):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=tol,
+                                   atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), k=st.integers(1, 4), lr=st.floats(0.01, 0.3))
+def test_i1_mu0_is_kavg(seed, k, lr):
+    b = _batches(seed, 2, k)
+    s1 = _run(MAvgConfig(algorithm="mavg", num_learners=2, k_steps=k,
+                         learner_lr=lr, momentum=0.0), b)
+    s2 = _run(MAvgConfig(algorithm="kavg", num_learners=2, k_steps=k,
+                         learner_lr=lr, momentum=0.9), b)  # mu ignored by kavg
+    _close(s1.global_params, s2.global_params)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), mu=st.floats(0.0, 0.9))
+def test_i2_sync_is_k1(seed, mu):
+    b = _batches(seed, 2, 1)
+    s1 = _run(MAvgConfig(algorithm="sync", num_learners=2, k_steps=1,
+                         learner_lr=0.1, momentum=mu), b)
+    s2 = _run(MAvgConfig(algorithm="mavg", num_learners=2, k_steps=1,
+                         learner_lr=0.1, momentum=mu), b)
+    _close(s1.global_params, s2.global_params)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), k=st.integers(1, 3))
+def test_i3_identical_learners_collapse(seed, k):
+    """If every learner sees the same data, P learners == 1 learner."""
+    b1 = _batches(seed, 1, k)
+    b4 = jax.tree.map(lambda a: jnp.broadcast_to(a, (4,) + a.shape[1:]), b1)
+    s1 = _run(MAvgConfig(algorithm="mavg", num_learners=1, k_steps=k,
+                         learner_lr=0.1, momentum=0.5), b1)
+    s4 = _run(MAvgConfig(algorithm="mavg", num_learners=4, k_steps=k,
+                         learner_lr=0.1, momentum=0.5), b4)
+    _close(s1.global_params, s4.global_params)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), mu=st.floats(0.0, 0.9),
+       eta=st.floats(0.5, 1.5))
+def test_i4_block_momentum_closed_form(seed, mu, eta):
+    cfg = MAvgConfig(algorithm="mavg", num_learners=2, k_steps=2,
+                     learner_lr=0.1, momentum=mu, meta_lr=eta)
+    b = _batches(seed, 2, 2)
+    state0 = init_state(PARAMS, cfg)
+    step = jax.jit(make_meta_step(mlp_loss, cfg))
+    state1, _ = step(state0, b)
+    # recompute: run only the local phase via kavg displacement
+    cfg0 = MAvgConfig(algorithm="kavg", num_learners=2, k_steps=2,
+                      learner_lr=0.1, meta_lr=1.0)
+    s_kavg, _ = jax.jit(make_meta_step(mlp_loss, cfg0))(
+        init_state(PARAMS, cfg0), b
+    )
+    d = tree_sub(s_kavg.global_params, PARAMS)  # kavg: w' = w + d
+    v_expect = jax.tree.map(lambda di: eta * di, d)  # v0 = 0
+    w_expect = tree_axpy(1.0, v_expect, PARAMS)
+    _close(state1.momentum, v_expect)
+    _close(state1.global_params, w_expect)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), lr=st.floats(0.01, 0.2))
+def test_i5_k1_p1_is_sgd(seed, lr):
+    b = _batches(seed, 1, 1)
+    s = _run(MAvgConfig(algorithm="kavg", num_learners=1, k_steps=1,
+                        learner_lr=lr), b, n_steps=1)
+    (_, _), g = jax.value_and_grad(mlp_loss, has_aux=True)(
+        PARAMS, jax.tree.map(lambda a: a[0, 0], b)
+    )
+    expect = tree_axpy(-lr, g, PARAMS)
+    _close(s.global_params, expect)
+
+
+def test_i6_downpour_warmup():
+    cfg = MAvgConfig(algorithm="downpour", num_learners=2, k_steps=2,
+                     learner_lr=0.1, staleness=3)
+    state = init_state(PARAMS, cfg)
+    step = jax.jit(make_meta_step(mlp_loss, cfg))
+    for i in range(3):
+        state, _ = step(state, _batches(i, 2, 2))
+        # global params frozen until the staleness queue warms up
+        if i < 2:
+            _close(state.global_params, PARAMS)
+    state, _ = step(state, _batches(99, 2, 2))
+    delta = float(tree_norm(tree_sub(state.global_params, PARAMS)))
+    assert delta > 1e-6  # updates flow after warmup
+
+
+def test_i7_pallas_meta_step_matches_jnp():
+    b = _batches(123, 2, 2)
+    base = dict(algorithm="mavg", num_learners=2, k_steps=2,
+                learner_lr=0.1, momentum=0.6)
+    s_jnp = _run(MAvgConfig(**base, use_pallas=False), b)
+    s_pl = _run(MAvgConfig(**base, use_pallas=True), b)
+    _close(s_jnp.global_params, s_pl.global_params, tol=1e-4)
+    _close(s_jnp.momentum, s_pl.momentum, tol=1e-4)
+
+
+def test_nesterov_differs_but_converges():
+    b = _batches(5, 2, 2)
+    s_hb = _run(MAvgConfig(algorithm="mavg", num_learners=2, k_steps=2,
+                           learner_lr=0.1, momentum=0.6), b, n_steps=3)
+    s_nv = _run(MAvgConfig(algorithm="mavg", num_learners=2, k_steps=2,
+                           learner_lr=0.1, momentum=0.6, nesterov=True), b,
+                n_steps=3)
+    diff = float(tree_norm(tree_sub(s_hb.global_params, s_nv.global_params)))
+    assert diff > 1e-7
+    for leaf in jax.tree.leaves(s_nv.global_params):
+        assert jnp.isfinite(leaf).all()

@@ -1,0 +1,61 @@
+"""Hypothesis property tests for the MoE dispatch invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models.moe import _capacity, _route, init_moe, moe_layer
+
+BASE = dataclasses.replace(get_config("deepseek-moe-16b").reduced(),
+                           dtype="float32")
+PARAMS = init_moe(jax.random.PRNGKey(0), BASE)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), T=st.integers(4, 48),
+       cf=st.floats(0.05, 2.0))
+def test_capacity_invariants(seed, T, cf):
+    """Per-expert load never exceeds capacity; kept slots route uniquely."""
+    cfg = dataclasses.replace(BASE, capacity_factor=cf)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, T, cfg.d_model))
+    xt = x.reshape(T, cfg.d_model)
+    gates, slot_expert, pos, keep, aux, C = _route(xt, PARAMS, cfg)
+    assert C == _capacity(T, cfg)
+    se = np.asarray(slot_expert)
+    kp = np.asarray(keep)
+    ps = np.asarray(pos)
+    # kept slots per expert <= C
+    for e in range(cfg.num_experts):
+        assert kp[se == e].sum() <= C
+    # kept (expert, position) pairs are unique (no slot collision)
+    pairs = set()
+    for i in np.where(kp)[0]:
+        key = (int(se[i]), int(ps[i]))
+        assert key not in pairs, key
+        pairs.add(key)
+    # gates are a normalised distribution over the top-k
+    g = np.asarray(gates)
+    np.testing.assert_allclose(g.sum(-1), 1.0, rtol=1e-4)
+    assert (g >= 0).all()
+    assert np.isfinite(float(aux))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_moe_output_finite_and_shaped(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 8, BASE.d_model))
+    out, aux = moe_layer(x, PARAMS, BASE)
+    assert out.shape == x.shape
+    assert jnp.isfinite(out).all()
+    assert float(aux) >= 0
+
+
+def test_capacity_zero_factor_still_defined():
+    """Degenerate capacity floors at 8 slots; output stays finite."""
+    cfg = dataclasses.replace(BASE, capacity_factor=1e-6)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 64, cfg.d_model))
+    out, _ = moe_layer(x, PARAMS, cfg)
+    assert jnp.isfinite(out).all()

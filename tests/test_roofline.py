@@ -1,0 +1,120 @@
+"""Roofline/HLO-parser unit tests against hand-written HLO snippets and a
+real compiled module."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline import collective_bytes, compute_terms, model_flops
+from repro.roofline.hlo_cost import hlo_cost, parse_module
+
+HLO = """\
+cond_comp (p: (s32[], f32[8,128])) -> pred[] {
+  %c = s32[] constant(5)
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+body_comp (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,128]{1,0} get-tuple-element(%p), index=1
+  %ar = f32[8,128]{1,0} all-reduce(%x), replica_groups={}, to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,128]) tuple(%ni, %ar)
+}
+
+ENTRY main (a: f32[8,128], b: f32[128,64]) -> f32[8,64] {
+  %a = f32[8,128]{1,0} parameter(0)
+  %b = f32[128,64]{1,0} parameter(1)
+  %init = (s32[], f32[8,128]) tuple(%zero, %a)
+  %w = (s32[], f32[8,128]) while(%init), condition=%cond_comp, body=%body_comp
+  %x = f32[8,128]{1,0} get-tuple-element(%w), index=1
+  %ag = f32[8,128]{1,0} all-gather(%x), dimensions={0}
+  ROOT %d = f32[8,64]{1,0} dot(%x, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_collective_trip_counts():
+    res = collective_bytes(HLO)
+    # all-reduce inside the while body: 8*128*4 bytes x 5 trips
+    assert res["by_type"]["all-reduce"] == 8 * 128 * 4 * 5
+    assert res["by_type"]["all-gather"] == 8 * 128 * 4
+
+
+def test_dot_flops():
+    cost = hlo_cost(HLO)
+    assert cost.flops == 2 * 8 * 64 * 128
+
+
+def test_parse_module_entry():
+    comps, entry = parse_module(HLO)
+    assert entry == "main"
+    assert "body_comp" in comps and "cond_comp" in comps
+
+
+def test_real_compiled_module_flops():
+    """Parsed FLOPs of a real jitted matmul match the analytic count."""
+    m, k, n = 64, 128, 32
+
+    def f(a, b):
+        return a @ b
+
+    compiled = (
+        jax.jit(f)
+        .lower(
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
+            jax.ShapeDtypeStruct((k, n), jnp.float32),
+        )
+        .compile()
+    )
+    cost = hlo_cost(compiled.as_text())
+    assert cost.flops == 2 * m * k * n
+
+
+def test_real_scan_trip_count():
+    """lax.scan of T matmuls parses to T x single-matmul FLOPs."""
+    T, m = 7, 32
+
+    def f(x, ws):
+        def step(x, w):
+            return jnp.tanh(x @ w), None
+
+        y, _ = jax.lax.scan(step, x, ws)
+        return y
+
+    compiled = (
+        jax.jit(f)
+        .lower(
+            jax.ShapeDtypeStruct((m, m), jnp.float32),
+            jax.ShapeDtypeStruct((T, m, m), jnp.float32),
+        )
+        .compile()
+    )
+    cost = hlo_cost(compiled.as_text())
+    assert cost.flops == T * 2 * m * m * m
+
+
+def test_terms_bottleneck():
+    from repro.configs.base import INPUT_SHAPES, get_config
+
+    cfg = get_config("qwen3-1.7b")
+    shape = INPUT_SHAPES["train_4k"]
+    t = compute_terms(
+        arch="qwen3-1.7b", shape=shape, mesh_name="single", chips=256,
+        hlo_flops=1e14, hlo_bytes=1e12, collective_bytes=1e9, cfg=cfg,
+        k_steps=2,
+    )
+    assert t.bottleneck == "memory"
+    assert t.compute_s > 0 and t.collective_s > 0
+    assert 0 < t.useful_ratio
+
+
+def test_model_flops_moe_active_only():
+    from repro.configs.base import INPUT_SHAPES, get_config
+
+    cfg = get_config("kimi-k2-1t-a32b")
+    shape = INPUT_SHAPES["train_4k"]
+    mf = model_flops(cfg, shape, k_steps=1)
+    dense_equiv = 6.0 * cfg.param_count() * shape.global_batch * shape.seq_len
+    assert mf < 0.15 * dense_equiv  # top-8 of 384 experts
