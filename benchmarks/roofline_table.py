@@ -38,19 +38,22 @@ def markdown_table(rows, *, include_memory=True) -> str:
     header = (
         "| arch | shape | mesh | per-dev args | temp | HLO FLOPs/dev |"
         " HBM bytes/dev | coll bytes/dev | compute s | memory s |"
-        " collective s | bound | useful |\n"
-        "|---|---|---|---|---|---|---|---|---|---|---|---|---|\n"
+        " collective s | bound | useful | comm | wire bytes | wire s |\n"
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n"
     )
     lines = []
     for r in rows:
         if r.get("skipped"):
             lines.append(
                 f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
-                f" SKIP: {r['reason']} ||||||||||"
+                f" SKIP: {r['reason']} |||||||||||||"
             )
             continue
         rf = r["roofline"]
         mem = r.get("memory", {})
+        # wire columns: modeled repro.comm payload (absent in pre-comm JSONs)
+        wire_b = rf.get("wire_bytes")
+        wire_s = rf.get("wire_s")
         lines.append(
             f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
             f" {_fmt_bytes(mem.get('argument_size_in_bytes'))} |"
@@ -60,6 +63,9 @@ def markdown_table(rows, *, include_memory=True) -> str:
             f" {rf['compute_s']:.3g} | {rf['memory_s']:.3g} |"
             f" {rf['collective_s']:.3g} | **{rf['bottleneck']}** |"
             f" {rf['useful_ratio']:.2f} |"
+            f" {rf.get('comm_scheme', '-')} |"
+            f" {_fmt_bytes(wire_b) if wire_b else '-'} |"
+            f" {f'{wire_s:.3g}' if wire_s else '-'} |"
         )
     return header + "\n".join(lines) + "\n"
 

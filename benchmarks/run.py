@@ -5,6 +5,7 @@
   E3 k_sweep.py         Lemmas 5 & 7 (optimal K > 1; momentum shrinks K)
   E4 baselines.py       section IV baselines (Downpour, EAMSGD, sync)
   K  kernel_bench.py    fused block-momentum + flash-attention kernels
+  C  comm_bench.py      meta-communication compression (repro.comm)
   R  roofline_table.py  section Dry-run / Roofline aggregation
 
 Prints ``name,...`` CSV lines. ``--quick`` shrinks steps/seeds (default
@@ -30,6 +31,7 @@ def main() -> None:
     from benchmarks import (
         ablations,
         baselines,
+        comm_bench,
         convergence,
         k_sweep,
         kernel_bench,
@@ -39,6 +41,7 @@ def main() -> None:
 
     suites = {
         "kernel": lambda: kernel_bench.main(quick=quick),
+        "comm": lambda: comm_bench.main(quick=quick),
         "convergence": lambda: convergence.main(quick=quick),
         "baselines": lambda: baselines.main(quick=quick),
         "k": lambda: k_sweep.main(quick=quick),

@@ -1,0 +1,27 @@
+# Pluggable compressed meta-communication: the Reducer protocol, its four
+# implementations, and the factory keyed on MAvgConfig.comm (DESIGN.md §5).
+from repro.comm.quant import QuantReducer
+from repro.comm.reducer import (
+    CompressedReducer,
+    DenseReducer,
+    ErrorFeedback,
+    Reducer,
+    dense_bytes,
+    make_reducer,
+    reducer_residual,
+    uses_error_feedback,
+)
+from repro.comm.topk import TopKReducer
+
+__all__ = [
+    "CompressedReducer",
+    "DenseReducer",
+    "ErrorFeedback",
+    "QuantReducer",
+    "Reducer",
+    "TopKReducer",
+    "dense_bytes",
+    "make_reducer",
+    "reducer_residual",
+    "uses_error_feedback",
+]

@@ -194,6 +194,45 @@ def all_configs() -> dict[str, ModelConfig]:
     return {a: get_config(a) for a in ARCH_IDS}
 
 
+# algorithms whose meta step is a plain average — the ones the repro.comm
+# reducer owns (eamsgd/downpour have their own update structure)
+AVERAGING_ALGOS = ("mavg", "kavg", "sync", "mavg_mlocal")
+
+COMM_SCHEMES = ("dense", "int8", "fp8", "topk", "int8_topk")
+
+
+@dataclass(frozen=True)
+class CommConfig:
+    """Meta-communication compression knobs (the ``repro.comm`` subsystem).
+
+    The meta average is the paper's one communication event per K local
+    steps; these knobs select how each learner's displacement w_j - w~ is
+    compressed on the wire (DESIGN.md §5).
+
+    scheme          dense | int8 | fp8 | topk | int8_topk
+    k_frac          kept fraction for the top-k schemes
+    error_feedback  carry the compression residual e_j in MetaState so the
+                    block-momentum update stays unbiased (EF-SGD)
+    chunk_rows      rows of the (rows, 128) wire layout sharing one f32
+                    quantization scale (chunk = chunk_rows * 128 values)
+    use_pallas      route quant/dequant through the Pallas kernels
+                    (interpret mode off-TPU) instead of the jnp reference
+    seed            stochastic-rounding PRNG stream
+    """
+
+    scheme: str = "dense"
+    k_frac: float = 0.1
+    error_feedback: bool = True
+    chunk_rows: int = 64
+    use_pallas: bool = False
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.scheme in COMM_SCHEMES, (
+            f"unknown comm scheme {self.scheme!r}; choose from {COMM_SCHEMES}"
+        )
+
+
 @dataclass(frozen=True)
 class MAvgConfig:
     """Hyper-parameters of the paper's Algorithm 1 (+ baselines)."""
@@ -215,6 +254,16 @@ class MAvgConfig:
     meta_dtype: str = "float32"
     compute_dtype: str = "float32"
     use_pallas: bool = False  # Pallas kernels on TPU; jnp ref elsewhere
+    # meta-communication compression (repro.comm); dense = exact average
+    comm: CommConfig = field(default_factory=CommConfig)
+
+    def __post_init__(self):
+        if self.comm.scheme != "dense" and self.algorithm not in AVERAGING_ALGOS:
+            raise ValueError(
+                f"comm scheme {self.comm.scheme!r} only applies to the "
+                f"averaging algorithms {AVERAGING_ALGOS}; "
+                f"{self.algorithm!r} communicates through its own update"
+            )
 
 
 @dataclass(frozen=True)

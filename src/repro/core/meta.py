@@ -20,6 +20,10 @@ The learner dimension is a leading pytree axis of size L = P (the paper's
 number of processors). Under pjit that axis is sharded over the mesh's
 learner axes, so the K inner steps emit no cross-learner collectives and
 the meta averaging is one all-reduce — the paper's communication model.
+That all-reduce is owned by a pluggable ``repro.comm`` Reducer (dense /
+int8 / fp8 / top-k, with optional error feedback whose residual rides in
+``MetaState.comm_residual`` — DESIGN.md §5), selected via
+``MAvgConfig.comm`` or injected into ``meta_step``/``make_meta_step``.
 """
 from __future__ import annotations
 
@@ -31,7 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.configs.base import MAvgConfig
+from repro.configs.base import AVERAGING_ALGOS, MAvgConfig
 from repro.utils import (
     tree_axpy,
     tree_broadcast_learners,
@@ -57,6 +61,8 @@ class MetaState:
     local_momentum: learner-level momentum stacks (mavg_mlocal) or None
     stale_queue:   downpour staleness queue (tau, ...) or None
     step:          meta iteration n
+    comm_residual: per-learner error-feedback residual e_j of the comm
+                   reducer (L, ...) f32, or None when EF is off
     """
 
     global_params: Any
@@ -65,20 +71,28 @@ class MetaState:
     local_momentum: Any
     stale_queue: Any
     step: jnp.ndarray
+    comm_residual: Any = None
 
 
-def init_state(params, cfg: MAvgConfig) -> MetaState:
+def init_state(params, cfg: MAvgConfig, reducer=None) -> MetaState:
     """Meta state (w~, v) in cfg.meta_dtype (f32 — Theorem 1's momentum
     variance is precision-sensitive); learner copies in cfg.compute_dtype
     (bf16 on TPU: halves every weight collective and the L-fold copy
-    memory; the meta average casts back up to f32)."""
+    memory; the meta average casts back up to f32).
+
+    Pass the same ``reducer`` you inject into meta_step/make_meta_step (if
+    any) so its error-feedback residual is allocated in comm_residual;
+    otherwise the reducer implied by ``cfg.comm`` decides.
+    """
+    from repro.comm import make_reducer
+
     gp = tree_cast(params, cfg.meta_dtype)
     learners = tree_broadcast_learners(
         tree_cast(gp, cfg.compute_dtype), cfg.num_learners
     )
     return MetaState(
         global_params=gp,
-        momentum=tree_zeros_like(gp) if cfg.algorithm != "kavg" else tree_zeros_like(gp),
+        momentum=tree_zeros_like(gp),
         learners=learners,
         local_momentum=(
             tree_zeros_like(learners) if cfg.algorithm == "mavg_mlocal" else None
@@ -91,6 +105,12 @@ def init_state(params, cfg: MAvgConfig) -> MetaState:
             else None
         ),
         step=jnp.zeros((), jnp.int32),
+        comm_residual=(
+            (make_reducer(cfg) if reducer is None else reducer)
+            .init_residual(gp, cfg.num_learners)
+            if cfg.algorithm in AVERAGING_ALGOS
+            else None
+        ),
     )
 
 
@@ -173,11 +193,12 @@ def _block_momentum_update(gp, v, avg, cfg: MAvgConfig):
 
 
 def meta_step(state: MetaState, batches, *, loss_fn: LossFn, cfg: MAvgConfig,
-              lr=None) -> tuple[MetaState, dict]:
+              lr=None, reducer=None) -> tuple[MetaState, dict]:
     """One meta-iteration n -> n+1 of Algorithm 1 (or a baseline).
 
     batches: pytree with leaves (L, K, B_local, ...) — K local mini-batches
-    for each of the L learners.
+    for each of the L learners. ``reducer`` overrides the comm scheme
+    built from ``cfg.comm`` (repro.comm.make_reducer).
     """
     lr = jnp.float32(cfg.learner_lr) if lr is None else lr
     algo = cfg.algorithm
@@ -185,16 +206,25 @@ def meta_step(state: MetaState, batches, *, loss_fn: LossFn, cfg: MAvgConfig,
         loss_fn, state.learners, state.local_momentum, batches, cfg, lr
     )
     gp, v = state.global_params, state.momentum
+    comm_res = state.comm_residual
     metrics = {"loss": loss, "grad_norm": gnorm}
 
-    if algo in ("mavg", "kavg", "sync", "mavg_mlocal"):
+    if algo in AVERAGING_ALGOS:
         mu = 0.0 if algo == "kavg" else cfg.momentum
-        avg = tree_cast(tree_mean_axis0(learners), cfg.meta_dtype)
+        if reducer is None:
+            from repro.comm import make_reducer
+
+            reducer = make_reducer(cfg)
+        avg, comm_res, comm_metrics = reducer.reduce(
+            learners, gp, comm_res, step=state.step
+        )
+        avg = tree_cast(avg, cfg.meta_dtype)
         eff = MAvgConfig(**{**cfg.__dict__, "momentum": mu})
         gp, v = _block_momentum_update(gp, v, avg, eff)
         learners = tree_broadcast_learners(tree_cast(gp, _ldtype(learners)), cfg.num_learners)
         metrics["v_norm"] = tree_norm(v)
         metrics["displacement_norm"] = tree_norm(tree_sub(avg, state.global_params))
+        metrics.update(comm_metrics)
 
     elif algo == "eamsgd":
         # elastic force toward the center; center gets block momentum.
@@ -235,7 +265,7 @@ def meta_step(state: MetaState, batches, *, loss_fn: LossFn, cfg: MAvgConfig,
         state = MetaState(
             global_params=gp, momentum=v, learners=learners,
             local_momentum=local_mom, stale_queue=queue,
-            step=state.step + 1,
+            step=state.step + 1, comm_residual=comm_res,
         )
         metrics["stale_norm"] = tree_norm(d_apply)
         return state, metrics
@@ -245,7 +275,7 @@ def meta_step(state: MetaState, batches, *, loss_fn: LossFn, cfg: MAvgConfig,
     state = MetaState(
         global_params=gp, momentum=v, learners=learners,
         local_momentum=local_mom, stale_queue=state.stale_queue,
-        step=state.step + 1,
+        step=state.step + 1, comm_residual=comm_res,
     )
     return state, metrics
 
@@ -254,6 +284,14 @@ def _ldtype(learners):
     return jax.tree.leaves(learners)[0].dtype
 
 
-def make_meta_step(loss_fn: LossFn, cfg: MAvgConfig):
-    """Returns a jit-able ``step(state, batches) -> (state, metrics)``."""
-    return partial(meta_step, loss_fn=loss_fn, cfg=cfg)
+def make_meta_step(loss_fn: LossFn, cfg: MAvgConfig, reducer=None):
+    """Returns a jit-able ``step(state, batches) -> (state, metrics)``.
+
+    The comm reducer is built once here (from ``cfg.comm`` unless one is
+    injected) so every trace reuses the same object.
+    """
+    if reducer is None and cfg.algorithm in AVERAGING_ALGOS:
+        from repro.comm import make_reducer
+
+        reducer = make_reducer(cfg)
+    return partial(meta_step, loss_fn=loss_fn, cfg=cfg, reducer=reducer)

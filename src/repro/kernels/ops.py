@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import block_momentum as _bm
 from repro.kernels import flash_attention as _fa
 from repro.kernels import local_sgd as _sgd
+from repro.kernels import quantize as _q
 from repro.kernels import ref as _ref
 
 LANES = 128
@@ -89,6 +90,55 @@ def sgd_apply(w, g, lr, *, interpret=None):
     g2, _, _ = _to_2d(g)
     out = _sgd.sgd_apply_2d(w2, g2, lr, interpret=interpret)
     return _from_2d(out, shape, n)
+
+
+# ---------------------------------------------------------------------------
+# displacement quantization (repro.comm wire compression)
+# ---------------------------------------------------------------------------
+
+
+def quantize(x, key, *, qmax=127, block=None, use_pallas=True, interpret=None):
+    """Quantize any-shaped ``x`` to (q int8 2-D, per-chunk scales).
+
+    Returns (q, scales, shape, n) — feed the last three to ``dequantize``.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    x2, shape, n = _to_2d(x.astype(jnp.float32))
+    b = _q.choose_block(x2.shape[0], block)
+    u2 = jax.random.uniform(key, x2.shape, jnp.float32)
+    if use_pallas:
+        q, s = _q.quantize_2d(x2, u2, qmax=qmax, block=b, interpret=interpret)
+    else:
+        q, s = _ref.quantize_ref(x2, u2, qmax, b)
+    return q, s, shape, n
+
+
+def dequantize(q, scales, shape, n, *, use_pallas=True, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    if use_pallas:
+        dq = _q.dequantize_2d(q, scales, interpret=interpret)
+    else:
+        dq = _ref.dequantize_ref(q, scales)
+    return _from_2d(dq, shape, n)
+
+
+def quant_dequant(x, key, *, dtype="int8", block=None, use_pallas=True,
+                  interpret=None):
+    """Round-trip wire compression of one leaf.
+
+    Returns (x-like f32 after quant->dequant, n_scale_chunks). ``dtype``:
+    int8 | int4 (stochastic-rounding Pallas kernels) | fp8 (jnp
+    per-chunk-scaled e4m3 cast).
+    """
+    if dtype == "fp8":
+        x2, shape, n = _to_2d(x.astype(jnp.float32))
+        b = _q.choose_block(x2.shape[0], block)
+        return _from_2d(_ref.fp8_roundtrip_ref(x2, b), shape, n), x2.shape[0] // b
+    qmax = {"int8": 127, "int4": 7}[dtype]
+    q, s, shape, n = quantize(x, key, qmax=qmax, block=block,
+                              use_pallas=use_pallas, interpret=interpret)
+    return dequantize(q, s, shape, n, use_pallas=use_pallas,
+                      interpret=interpret), s.shape[0]
 
 
 # ---------------------------------------------------------------------------

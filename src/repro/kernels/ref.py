@@ -23,6 +23,40 @@ def sgd_apply_ref(w, g, lr):
     return (w.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(w.dtype)
 
 
+def quantize_ref(x, u, qmax: int, block: int):
+    """Oracle of quantize.quantize_2d: x, u (rows, 128); per-chunk scales.
+
+    Same math as the kernel, so with a shared ``u`` the outputs are
+    bit-identical, not just statistically close.
+    """
+    rows, lanes = x.shape
+    nchunks = rows // block
+    xb = x.astype(jnp.float32).reshape(nchunks, block * lanes)
+    scales = jnp.maximum(jnp.abs(xb).max(axis=1), 1e-12) / qmax  # (nchunks,)
+    s_full = jnp.repeat(scales, block)[:, None]  # (rows, 1)
+    q = jnp.floor(x.astype(jnp.float32) / s_full + u)
+    return jnp.clip(q, -qmax, qmax).astype(jnp.int8), scales.reshape(-1, 1)
+
+
+def dequantize_ref(q, scales):
+    rows = q.shape[0]
+    block = rows // scales.shape[0]
+    s_full = jnp.repeat(scales.reshape(-1), block)[:, None]
+    return q.astype(jnp.float32) * s_full
+
+
+def fp8_roundtrip_ref(x, block: int):
+    """Per-chunk-scaled float8_e4m3 cast (deterministic round-to-nearest;
+    fp8's mantissa makes stochastic dither unnecessary at these ranges)."""
+    rows, lanes = x.shape
+    nchunks = rows // block
+    xb = x.astype(jnp.float32).reshape(nchunks, block * lanes)
+    scales = jnp.maximum(jnp.abs(xb).max(axis=1), 1e-12) / 448.0  # e4m3 max
+    s_full = jnp.repeat(scales, block)[:, None]
+    x8 = (x.astype(jnp.float32) / s_full).astype(jnp.float8_e4m3fn)
+    return x8.astype(jnp.float32) * s_full
+
+
 def flash_attention_ref(q, k, v, *, causal=True, sliding_window=0,
                         prefix_global=0):
     """q: (B, S, H, D); k, v: (B, S, KV, D). Full-softmax oracle."""

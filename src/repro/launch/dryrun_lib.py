@@ -223,10 +223,10 @@ def run_one(arch: str, shape_name: str, mesh_name: str, *,
             k_steps = mcfg.k_steps
         elif shape.kind == "prefill":
             fn, args = build_prefill(cfg_eff, mesh, shape)
-            k_steps = 1
+            mcfg, k_steps = None, 1
         else:
             fn, args = build_decode(cfg_eff, mesh, shape)
-            k_steps = 1
+            mcfg, k_steps = None, 1
         lowered = fn.lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()
@@ -255,6 +255,8 @@ def run_one(arch: str, shape_name: str, mesh_name: str, *,
         arch=arch, shape=shape, mesh_name=mesh_name, chips=chips,
         hlo_flops=hlo_flops, hlo_bytes=hlo_bytes,
         collective_bytes=float(coll["total"]), cfg=cfg_eff, k_steps=k_steps,
+        comm=mcfg.comm if mcfg is not None else None,
+        num_learners=mcfg.num_learners if mcfg is not None else 1,
     )
     result["roofline"] = terms.to_dict()
     result["param_count"] = cfg_eff.param_count()

@@ -121,6 +121,10 @@ def state_shardings(cfg: ModelConfig, mcfg: MAvgConfig, mesh, *,
     n = lambda t: jax.tree.map(
         lambda s: NamedSharding(mesh, s), t, is_leaf=lambda x: isinstance(x, P)
     )
+    from repro.comm import uses_error_feedback
+
+    # EF residual is per-learner f32 with the learners' shapes -> same specs
+    comm_sh = n(learner_specs) if uses_error_feedback(mcfg) else None
     return MetaState(
         global_params=n(gp_specs),
         momentum=n(gp_specs),
@@ -128,6 +132,7 @@ def state_shardings(cfg: ModelConfig, mcfg: MAvgConfig, mesh, *,
         local_momentum=None,
         stale_queue=None,
         step=NamedSharding(mesh, P()),
+        comm_residual=comm_sh,
     )
 
 
@@ -187,7 +192,7 @@ def decode_input_specs(cfg: ModelConfig, shape: InputShape):
 
 
 def cache_shardings(cfg: ModelConfig, mesh, shape: InputShape):
-    """Family-specific KV-cache / recurrent-state placement (DESIGN.md §5)."""
+    """Family-specific KV-cache / recurrent-state placement (DESIGN.md §6)."""
     baxes = _batch_axes(mesh, shape.global_batch)
     msize = mesh.shape["model"]
 

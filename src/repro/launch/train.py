@@ -19,7 +19,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import MAvgConfig, TrainConfig, get_config
+from repro.configs.base import CommConfig, MAvgConfig, TrainConfig, get_config
 from repro.core.trainer import Trainer
 from repro.data import lm_batch_fn, lm_eval_set
 from repro.models import api as model_api
@@ -42,6 +42,13 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="full-scale config (TPU pod required)")
     ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--comm", default="dense",
+                    choices=["dense", "int8", "fp8", "topk", "int8_topk"],
+                    help="meta-communication compression scheme (repro.comm)")
+    ap.add_argument("--comm-k-frac", type=float, default=0.1,
+                    help="kept fraction for the top-k comm schemes")
+    ap.add_argument("--no-error-feedback", action="store_true",
+                    help="disable the comm error-feedback residual")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -55,6 +62,8 @@ def main() -> None:
     mcfg = MAvgConfig(
         algorithm=args.algorithm, num_learners=args.learners, k_steps=args.k,
         learner_lr=args.lr, momentum=args.momentum,
+        comm=CommConfig(scheme=args.comm, k_frac=args.comm_k_frac,
+                        error_feedback=not args.no_error_feedback),
     )
     tcfg = TrainConfig(
         model=cfg, mavg=mcfg, batch_per_learner=args.batch, seq_len=args.seq,

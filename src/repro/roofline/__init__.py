@@ -5,5 +5,6 @@ from repro.roofline.terms import (
     PEAK_FLOPS_BF16,
     RooflineTerms,
     compute_terms,
+    meta_wire_bytes,
     model_flops,
 )

@@ -9,12 +9,19 @@ totals, per the SPMD single-program view); collective bytes come from the
 HLO parser in hlo.py. MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE) is
 the useful-work yardstick: HLO/MODEL ratio exposes remat recompute and
 redundancy.
+
+Meta-communication adds a fourth, *modeled* term: ``wire_bytes`` is the
+payload of the per-meta-step displacement all-reduce under the configured
+``repro.comm`` scheme (meta_wire_bytes), and ``wire_s`` its link time —
+so the roofline table shows the compression win next to the HLO-measured
+collective term.
 """
 from __future__ import annotations
 
 from dataclasses import asdict, dataclass
+from typing import Optional
 
-from repro.configs.base import InputShape, ModelConfig
+from repro.configs.base import CommConfig, InputShape, ModelConfig
 
 # TPU v5e per-chip constants (from the spec)
 PEAK_FLOPS_BF16 = 197e12  # FLOP/s
@@ -37,9 +44,41 @@ class RooflineTerms:
     collective_s: float
     bottleneck: str
     useful_ratio: float  # MODEL_FLOPS / HLO_FLOPs
+    # modeled meta-communication (repro.comm); 0 / "dense" when not computed
+    wire_bytes: float = 0.0
+    wire_s: float = 0.0
+    comm_scheme: str = "dense"
 
     def to_dict(self):
         return asdict(self)
+
+
+def meta_wire_bytes(n_params: int, comm: Optional[CommConfig], *,
+                    num_learners: int, learner_bytes: int = 4) -> tuple[float, float]:
+    """(dense_bytes, wire_bytes) of one meta averaging round.
+
+    Analytic model matching repro.comm's per-step accounting (the
+    bytes-per-value/scale/index constants are imported from there so the
+    two can't drift): every learner ships its (possibly compressed)
+    displacement; scales are one f32 per chunk_rows x 128 values.
+    """
+    from repro.comm.quant import SCALE_BYTES, VALUE_BYTES
+    from repro.comm.topk import INDEX_BYTES
+
+    dense = float(num_learners * n_params * learner_bytes)
+    if comm is None or comm.scheme == "dense":
+        return dense, dense
+    n_chunks = max(1.0, n_params / (comm.chunk_rows * 128))
+    if comm.scheme in VALUE_BYTES:
+        per = n_params * VALUE_BYTES[comm.scheme] + n_chunks * SCALE_BYTES
+    elif comm.scheme == "topk":
+        per = comm.k_frac * n_params * (learner_bytes + INDEX_BYTES)
+    elif comm.scheme == "int8_topk":
+        per = (comm.k_frac * n_params * (VALUE_BYTES["int8"] + INDEX_BYTES)
+               + n_chunks * SCALE_BYTES)
+    else:
+        raise ValueError(f"unknown comm scheme {comm.scheme!r}")
+    return dense, float(num_learners * per)
 
 
 def model_flops(cfg: ModelConfig, shape: InputShape, k_steps: int = 1) -> float:
@@ -58,7 +97,8 @@ def model_flops(cfg: ModelConfig, shape: InputShape, k_steps: int = 1) -> float:
 def compute_terms(*, arch: str, shape: InputShape, mesh_name: str, chips: int,
                   hlo_flops: float, hlo_bytes: float, collective_bytes: float,
                   cfg: ModelConfig, k_steps: int = 1,
-                  per_device: bool = True) -> RooflineTerms:
+                  per_device: bool = True, comm: Optional[CommConfig] = None,
+                  num_learners: int = 1) -> RooflineTerms:
     """per_device=True: the HLO numbers come from the SPMD-partitioned
     module, i.e. they are already per-chip (this is what
     ``compiled.as_text()`` exposes). The spec formula X/(chips*rate) with
@@ -71,6 +111,12 @@ def compute_terms(*, arch: str, shape: InputShape, mesh_name: str, chips: int,
     terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
     bottleneck = max(terms, key=terms.get)
     mf_dev = mf / chips if per_device else mf
+    wire_bytes = wire_s = 0.0
+    if comm is not None:
+        _, wire_bytes = meta_wire_bytes(
+            cfg.param_count(), comm, num_learners=num_learners
+        )
+        wire_s = wire_bytes / (chips * ICI_LINK_BW)
     return RooflineTerms(
         arch=arch,
         shape=shape.name,
@@ -85,4 +131,7 @@ def compute_terms(*, arch: str, shape: InputShape, mesh_name: str, chips: int,
         collective_s=collective_s,
         bottleneck=bottleneck,
         useful_ratio=mf_dev / hlo_flops if hlo_flops else 0.0,
+        wire_bytes=wire_bytes,
+        wire_s=wire_s,
+        comm_scheme=comm.scheme if comm is not None else "dense",
     )

@@ -61,3 +61,44 @@ def test_momentum_saved(tmp_path):
     for a, b in zip(jax.tree.leaves(state.momentum),
                     jax.tree.leaves(restored.momentum)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_comm_residual_roundtrip(tmp_path):
+    """Extended MetaState: a non-None error-feedback comm_residual (and a
+    stale_queue in the same state) round-trips bit-identically, and a
+    resumed int8+EF run stays on the live trajectory — losing e_j would
+    silently re-bias the compressed averaging."""
+    import dataclasses as dc
+
+    from repro.configs.base import CommConfig
+
+    cfg = MAvgConfig(algorithm="mavg", num_learners=2, k_steps=2,
+                     learner_lr=0.1, momentum=0.6,
+                     comm=CommConfig(scheme="int8", error_feedback=True))
+    params = mlp_init(jax.random.PRNGKey(2), 8, 16, 4)
+    step = jax.jit(make_meta_step(mlp_loss, cfg))
+    state = init_state(params, cfg)
+    for i in range(3):
+        state, _ = step(state, _batches(i))
+    assert state.comm_residual is not None
+    res_norm = sum(float(jnp.sum(jnp.abs(x)))
+                   for x in jax.tree.leaves(state.comm_residual))
+    assert res_norm > 0  # EF actually accumulated something
+
+    # graft a stale_queue on as well: both optional fields must coexist
+    queue = jax.tree.map(lambda x: jnp.stack([x, 2 * x]), state.global_params)
+    state = dc.replace(state, stale_queue=queue)
+
+    path = save_state(str(tmp_path), state, 3)
+    restored = load_state(path, jax.eval_shape(lambda: state))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # resume (sans the grafted queue) and check bit-identical continuation
+    live = dc.replace(state, stale_queue=None)
+    resumed = dc.replace(restored, stale_queue=None)
+    for i in range(3, 5):
+        live, _ = step(live, _batches(i))
+        resumed, _ = step(resumed, _batches(i))
+    for a, b in zip(jax.tree.leaves(live), jax.tree.leaves(resumed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

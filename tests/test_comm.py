@@ -1,0 +1,242 @@
+"""repro.comm acceptance tests: Pallas quant kernels (interpret mode) vs
+jnp oracles, reducer semantics, the error-feedback invariant, bytes-on-
+wire accounting, and the int8+EF convergence criterion."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import (
+    DenseReducer,
+    ErrorFeedback,
+    QuantReducer,
+    TopKReducer,
+    make_reducer,
+)
+from repro.configs.base import CommConfig, MAvgConfig
+from repro.core.meta import init_state, make_meta_step
+from repro.kernels import ops, ref
+from repro.kernels import quantize as qk
+from repro.models.simple import mlp_init, mlp_loss
+from repro.utils import tree_add, tree_sub
+
+RNG = np.random.RandomState(7)
+D, C, H = 8, 16, 4  # mlp dims for the training tests
+
+
+# ---------------------------------------------------------------------------
+# kernels: Pallas (interpret) vs jnp oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rows,block", [(8, 8), (64, 16), (192, 64), (256, 256)])
+def test_quantize_kernel_matches_ref(rows, block):
+    x = jnp.asarray(RNG.randn(rows, 128) * 0.03, jnp.float32)
+    u = jnp.asarray(RNG.rand(rows, 128), jnp.float32)
+    q_k, s_k = qk.quantize_2d(x, u, qmax=127, block=block, interpret=True)
+    q_r, s_r = ref.quantize_ref(x, u, 127, block)
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_r))
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), rtol=1e-7)
+    dq_k = qk.dequantize_2d(q_k, s_k, interpret=True)
+    dq_r = ref.dequantize_ref(q_r, s_r)
+    np.testing.assert_allclose(np.asarray(dq_k), np.asarray(dq_r), rtol=1e-7)
+
+
+@pytest.mark.parametrize("shape", [(1000,), (33, 7), (3,), (2, 3, 5, 7), (513, 130)])
+@pytest.mark.parametrize("dtype", ["int8", "int4", "fp8"])
+def test_quant_dequant_error_bound(shape, dtype):
+    """Round-trip error is below one wire-grid step per chunk."""
+    x = jnp.asarray(RNG.randn(*shape), jnp.float32)
+    dq, nchunks = ops.quant_dequant(x, jax.random.PRNGKey(0), dtype=dtype,
+                                    use_pallas=True, interpret=True)
+    assert dq.shape == x.shape and nchunks >= 1
+    # fp8 e4m3: 3 mantissa bits -> half-ulp at the binade top is amax/28
+    qmax = {"int8": 127, "int4": 7, "fp8": 28}[dtype]
+    bound = float(jnp.max(jnp.abs(x))) / qmax
+    assert float(jnp.max(jnp.abs(dq - x))) <= bound * 1.0001
+
+
+def test_stochastic_rounding_unbiased():
+    """E[dequant(quant(x))] = x: the property EF + Theorem 1 rely on."""
+    x = jnp.asarray(RNG.randn(8, 128) * 0.01, jnp.float32)
+    acc = np.zeros(x.shape, np.float64)
+    n = 300
+    for i in range(n):
+        dq, _ = ops.quant_dequant(x, jax.random.PRNGKey(i), dtype="int8",
+                                  use_pallas=True, interpret=True)
+        acc += np.asarray(dq, np.float64)
+    scale = float(jnp.max(jnp.abs(x))) / 127
+    # per-element sd of stochastic floor is at most scale/2, so the mean
+    # of n draws has sd <= scale/(2 sqrt n); allow 6 sigma over 1024 cells
+    tol = 6 * scale / (2 * np.sqrt(n))
+    np.testing.assert_allclose(acc / n, np.asarray(x), atol=tol)
+
+
+def test_masked_zeros_survive_quantization():
+    x = jnp.asarray(RNG.randn(16, 128), jnp.float32)
+    x = x.at[:8].set(0.0)
+    dq, _ = ops.quant_dequant(x, jax.random.PRNGKey(3), dtype="int8",
+                              use_pallas=True, interpret=True)
+    assert float(jnp.max(jnp.abs(dq[:8]))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# reducers
+# ---------------------------------------------------------------------------
+
+
+def _learner_stack(seed, L=4):
+    gp = mlp_init(jax.random.PRNGKey(seed), D, H, C)
+    learners = jax.tree.map(
+        lambda x: x[None] + 0.01 * jax.random.normal(
+            jax.random.PRNGKey(seed + 1), (L,) + x.shape
+        ),
+        gp,
+    )
+    return gp, learners
+
+
+def test_dense_reducer_is_plain_mean():
+    gp, learners = _learner_stack(0)
+    avg, res, m = DenseReducer().reduce(learners, gp, None, step=0)
+    want = jax.tree.map(lambda x: jnp.mean(x, 0), learners)
+    for a, w in zip(jax.tree.leaves(avg), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(w), rtol=1e-7)
+    assert res is None and m["comm_compression"] == 1.0
+
+
+def test_error_feedback_invariant():
+    """delta + e = C(delta + e) + e' holds exactly, leaf by leaf."""
+    gp, learners = _learner_stack(1)
+    red = ErrorFeedback(TopKReducer(k_frac=0.1, quant_dtype="int8",
+                                    use_pallas=True))
+    e0 = red.init_residual(gp, 4)
+    avg, e1, m = red.reduce(learners, gp, e0, step=jnp.int32(0))
+    delta = jax.tree.map(
+        lambda w, g: w.astype(jnp.float32) - g[None], learners, gp
+    )
+    total = tree_add(delta, e0)
+    # reconstruct C(total) from avg: C_mean = avg - gp; C = total - e1
+    c = tree_sub(total, e1)
+    for ci, ti, e1i in zip(jax.tree.leaves(c), jax.tree.leaves(total),
+                           jax.tree.leaves(e1)):
+        np.testing.assert_allclose(np.asarray(ci + e1i), np.asarray(ti),
+                                   rtol=1e-6, atol=1e-7)
+    # and avg really is gp + mean_j C_j
+    want = jax.tree.map(lambda g, ci: g + jnp.mean(ci, 0), gp, c)
+    for a, w in zip(jax.tree.leaves(avg), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(w), rtol=1e-6,
+                                   atol=1e-7)
+
+
+def test_residual_only_with_error_feedback():
+    gp = mlp_init(jax.random.PRNGKey(0), D, H, C)
+    for scheme, ef, expect in [("dense", True, False), ("int8", False, False),
+                               ("int8", True, True), ("int8_topk", True, True)]:
+        cfg = MAvgConfig(num_learners=3,
+                         comm=CommConfig(scheme=scheme, error_feedback=ef))
+        state = init_state(gp, cfg)
+        assert (state.comm_residual is not None) == expect, (scheme, ef)
+        if expect:
+            assert all(
+                x.shape[0] == 3 for x in jax.tree.leaves(state.comm_residual)
+            )
+
+
+def test_topk_mostly_zero_leaf_stays_sparse():
+    """thresh == 0 (ties at zero) must not disable sparsification."""
+    gp = {"w": jnp.zeros((8, 16))}
+    learners = {"w": jnp.zeros((2, 8, 16)).at[:, 0, 0].set(1.0)}
+    avg, _, m = TopKReducer(k_frac=0.1).reduce(learners, gp, None, step=0)
+    assert int(jnp.sum(avg["w"] != 0)) == 1  # only the real nonzero survives
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        MAvgConfig(algorithm="eamsgd", comm=CommConfig(scheme="int8"))
+    with pytest.raises(AssertionError):
+        CommConfig(scheme="deflate")
+
+
+def test_injected_ef_reducer():
+    """An injected reducer gets its residual via init_state(reducer=...);
+    a mismatched init (no reducer) fails loudly instead of silently
+    running without error feedback."""
+    cfg = MAvgConfig(algorithm="mavg", num_learners=2, k_steps=2)  # dense cfg
+    red = ErrorFeedback(QuantReducer(dtype="int8"))
+    params = mlp_init(jax.random.PRNGKey(0), D, H, C)
+    state = init_state(params, cfg, reducer=red)
+    assert state.comm_residual is not None
+    step = jax.jit(make_meta_step(mlp_loss, cfg, reducer=red))
+    state2, m = step(state, _batches(0, 2, 2))
+    assert "comm_error_norm" in m
+    assert state2.comm_residual is not None
+
+    bad = init_state(params, cfg)  # forgot reducer= -> residual is None
+    with pytest.raises(ValueError, match="residual"):
+        make_meta_step(mlp_loss, cfg, reducer=red)(bad, _batches(0, 2, 2))
+
+
+def test_int8_topk_wire_bytes_at_least_4x():
+    """Acceptance: >=4x bytes-on-wire reduction vs dense."""
+    gp, learners = _learner_stack(2)
+    red = make_reducer(MAvgConfig(
+        comm=CommConfig(scheme="int8_topk", error_feedback=False)
+    ))
+    _, _, m = red.reduce(learners, gp, None, step=jnp.int32(0))
+    assert m["comm_bytes_dense"] / m["comm_bytes"] >= 4.0
+    # int8 alone is ~3.9x; top-k alone 5x at k_frac=0.1
+    red8 = make_reducer(MAvgConfig(comm=CommConfig(scheme="int8",
+                                                   error_feedback=False)))
+    _, _, m8 = red8.reduce(learners, gp, None, step=jnp.int32(0))
+    assert 3.5 <= m8["comm_bytes_dense"] / m8["comm_bytes"] <= 4.0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: mavg + int8 EF converges like dense mavg
+# ---------------------------------------------------------------------------
+
+
+def _batches(seed, L, K, B=8):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    return {
+        "x": jax.random.normal(kx, (L, K, B, D)),
+        "y": jax.random.randint(ky, (L, K, B), 0, C),
+    }
+
+
+def _train(comm, steps=40, L=2, K=2):
+    cfg = MAvgConfig(algorithm="mavg", num_learners=L, k_steps=K,
+                     learner_lr=0.1, momentum=0.7, comm=comm)
+    params = mlp_init(jax.random.PRNGKey(0), D, H, C)
+    state = init_state(params, cfg)
+    step = jax.jit(make_meta_step(mlp_loss, cfg))
+    loss = None
+    for i in range(steps):
+        state, m = step(state, _batches(i, L, K))
+    return float(m["loss"])
+
+
+def test_int8_ef_matches_dense_convergence():
+    """Acceptance: mavg + QuantReducer(int8) + ErrorFeedback reaches final
+    loss within 5% of dense mavg at equal meta-iterations, with the Pallas
+    kernels active (interpret mode on CPU)."""
+    dense = _train(CommConfig(scheme="dense"))
+    quant = _train(CommConfig(scheme="int8", error_feedback=True,
+                              use_pallas=True))
+    assert abs(quant - dense) / dense < 0.05, (quant, dense)
+
+
+def test_meta_step_metrics_include_comm():
+    cfg = MAvgConfig(algorithm="mavg", num_learners=2, k_steps=2,
+                     comm=CommConfig(scheme="topk", error_feedback=True))
+    params = mlp_init(jax.random.PRNGKey(0), D, H, C)
+    state = init_state(params, cfg)
+    step = jax.jit(make_meta_step(mlp_loss, cfg))
+    state2, m = step(state, _batches(0, 2, 2))
+    for key in ("comm_bytes", "comm_bytes_dense", "comm_compression",
+                "comm_error_norm"):
+        assert key in m, key
+    # residual structure is stable across steps (jit donation-safe)
+    assert jax.tree_util.tree_structure(state.comm_residual) == \
+        jax.tree_util.tree_structure(state2.comm_residual)

@@ -9,7 +9,8 @@ from repro.launch import specs as S
 from repro.models import api as model_api
 from repro.sharding import add_learner_axis, make_param_specs
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
+# jax >= 0.4.35: AbstractMesh takes a single ((name, size), ...) tuple
+MESH = AbstractMesh((("data", 16), ("model", 16)))
 
 
 def _specs(arch, **kw):
