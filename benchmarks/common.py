@@ -17,13 +17,17 @@ D_IN, CLASSES, HIDDEN = 32, 10, 64
 def run_mlp(algorithm: str, *, P: int, K: int, mu: float, lr: float = 0.2,
             steps: int = 60, batch: int = 16, seed: int = 0,
             local_momentum: float = 0.0, staleness: int = 1,
-            elastic_alpha: float = 0.05, comm=None):
+            elastic_alpha: float = 0.05, comm=None, topology=None):
     """Train the teacher-classification MLP; returns (losses, val_acc).
 
     ``comm``: optional CommConfig selecting the meta-communication
-    compression scheme (default dense / exact averaging).
+    compression scheme (default dense / exact averaging). ``topology``:
+    optional TopologyConfig selecting the meta-level mixing structure
+    (default flat all-reduce).
     """
     extra = {} if comm is None else {"comm": comm}
+    if topology is not None:
+        extra["topology"] = topology
     cfg = MAvgConfig(
         algorithm=algorithm, num_learners=P, k_steps=K, learner_lr=lr,
         momentum=mu, local_momentum=local_momentum, staleness=staleness,

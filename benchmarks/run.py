@@ -6,6 +6,7 @@
   E4 baselines.py       section IV baselines (Downpour, EAMSGD, sync)
   K  kernel_bench.py    fused block-momentum + flash-attention kernels
   C  comm_bench.py      meta-communication compression (repro.comm)
+  T  topology_bench.py  meta-mixing topologies x comm (repro.topology)
   R  roofline_table.py  section Dry-run / Roofline aggregation
 
 Prints ``name,...`` CSV lines. ``--quick`` shrinks steps/seeds (default
@@ -24,7 +25,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", nargs="*", default=None,
-                    help="subset: convergence mu_p k baselines kernel roofline")
+                    help="subset: convergence mu_p k baselines kernel comm topology roofline")
     args = ap.parse_args()
     quick = not args.full
 
@@ -37,11 +38,13 @@ def main() -> None:
         kernel_bench,
         mu_p_sweep,
         roofline_table,
+        topology_bench,
     )
 
     suites = {
         "kernel": lambda: kernel_bench.main(quick=quick),
         "comm": lambda: comm_bench.main(quick=quick),
+        "topology": lambda: topology_bench.main(quick=quick),
         "convergence": lambda: convergence.main(quick=quick),
         "baselines": lambda: baselines.main(quick=quick),
         "k": lambda: k_sweep.main(quick=quick),

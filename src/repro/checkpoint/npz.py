@@ -1,7 +1,13 @@
 """Flat-npz pytree checkpointer (no orbax dependency).
 
-Saves the full MetaState — global params, block momentum, learner copies —
-so a resumed run is bit-identical (tested in tests/test_checkpoint.py).
+Saves the full MetaState — global params, block momentum, learner copies,
+the comm error-feedback residual and the topology buffers (group params /
+momentum under hierarchical, per-learner params / momentum / residual
+under gossip, riding in ``MetaState.topo`` as a dict pytree) — so a
+resumed run is bit-identical (tested in tests/test_checkpoint.py and
+tests/test_topology.py). Keys are slash-joined tree paths; optional
+fields that are None contribute no leaves, so the layout only changes
+when a feature is on.
 """
 from __future__ import annotations
 
@@ -39,11 +45,28 @@ def load_state(path: str, template):
     leaves_t, treedef = jax.tree_util.tree_flatten(template)
     paths = jax.tree_util.tree_flatten_with_path(template)[0]
     leaves = []
+    seen = set()
     for (p, leaf) in paths:
         key = "/".join(_path_key(q) for q in p)
+        if key not in data:
+            raise KeyError(
+                f"checkpoint {path} has no entry {key!r} — it was saved "
+                f"under a different MAvgConfig (comm / topology buffers "
+                f"only exist when the feature was on at save time)"
+            )
+        seen.add(key)
         arr = jnp.asarray(data[key], dtype=leaf.dtype)
         assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
         leaves.append(arr)
+    extra = sorted(set(data.files) - seen)
+    if extra:
+        # silently dropping saved state (e.g. resuming a gossip run with
+        # --topology flat would discard topo/params) diverges the run
+        raise ValueError(
+            f"checkpoint {path} carries entries the restore template does "
+            f"not expect ({extra[:4]}{'...' if len(extra) > 4 else ''}) — "
+            f"resume with the MAvgConfig the run was saved under"
+        )
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 

@@ -8,6 +8,7 @@ from repro.comm.reducer import (
     Reducer,
     dense_bytes,
     make_reducer,
+    make_reducer_for,
     reducer_residual,
     uses_error_feedback,
 )
@@ -22,6 +23,7 @@ __all__ = [
     "TopKReducer",
     "dense_bytes",
     "make_reducer",
+    "make_reducer_for",
     "reducer_residual",
     "uses_error_feedback",
 ]

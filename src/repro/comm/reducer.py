@@ -145,12 +145,18 @@ class ErrorFeedback(Reducer):
 
 def make_reducer(cfg) -> Reducer:
     """Build the reducer described by ``cfg.comm`` (an MAvgConfig)."""
+    return make_reducer_for(cfg.comm, meta_dtype=cfg.meta_dtype)
+
+
+def make_reducer_for(c, meta_dtype: str = "float32") -> Reducer:
+    """Build a reducer from a bare ``CommConfig`` — the topology subsystem
+    instantiates one per edge class (intra-group / cross-group / gossip
+    neighbor), each with its own scheme."""
     from repro.comm.quant import QuantReducer
     from repro.comm.topk import TopKReducer
 
-    c = cfg.comm
     if c.scheme == "dense":
-        return DenseReducer(meta_dtype=cfg.meta_dtype)
+        return DenseReducer(meta_dtype=meta_dtype)
     if c.scheme in ("int8", "fp8"):
         r = QuantReducer(dtype=c.scheme, chunk_rows=c.chunk_rows,
                          use_pallas=c.use_pallas, seed=c.seed)
@@ -168,14 +174,19 @@ def make_reducer(cfg) -> Reducer:
 
 
 def uses_error_feedback(cfg) -> bool:
-    """Does ``cfg`` (an MAvgConfig) carry an EF residual in MetaState?
+    """Does ``cfg`` (an MAvgConfig) carry an EF residual in
+    ``MetaState.comm_residual``?
 
     The single source of truth for 'is comm_residual a pytree or None' —
-    init_state and launch.specs.state_shardings must agree on it.
+    init_state and launch.specs.state_shardings must agree on it. Only
+    the *flat* topology keeps its residual there; hierarchical/gossip
+    carry theirs inside ``MetaState.topo`` (repro.topology owns the
+    buffer layout), so comm_residual stays None for them.
     """
     from repro.configs.base import AVERAGING_ALGOS
 
     return (cfg.algorithm in AVERAGING_ALGOS
+            and cfg.topology.kind == "flat"
             and cfg.comm.scheme != "dense" and cfg.comm.error_feedback)
 
 

@@ -198,7 +198,16 @@ def all_configs() -> dict[str, ModelConfig]:
 # reducer owns (eamsgd/downpour have their own update structure)
 AVERAGING_ALGOS = ("mavg", "kavg", "sync", "mavg_mlocal")
 
+# every algorithm core/meta.py implements — the single source the CLI
+# `choices` are derived from (launch/train.py)
+ALGORITHMS = AVERAGING_ALGOS + ("eamsgd", "downpour")
+
 COMM_SCHEMES = ("dense", "int8", "fp8", "topk", "int8_topk")
+
+# meta-level mixing topologies (the repro.topology subsystem)
+TOPOLOGIES = ("flat", "hierarchical", "gossip")
+
+GOSSIP_GRAPHS = ("ring", "exponential", "complete")
 
 
 @dataclass(frozen=True)
@@ -234,6 +243,50 @@ class CommConfig:
 
 
 @dataclass(frozen=True)
+class TopologyConfig:
+    """Who averages with whom, how often (the ``repro.topology`` subsystem).
+
+    The paper's flat model — every learner averages with every other
+    learner each meta step — is one point in a family (DESIGN.md §7):
+
+    kind             flat | hierarchical | gossip
+    groups           G: learners partitioned into G groups (hierarchical)
+    outer_every      H: cross-group average every H meta steps, so the
+                     slow inter-node links are touched once per K·H local
+                     steps while intra-node averaging stays at every K
+    outer_momentum   mu_out: block momentum of the outer (cross-group)
+                     level; the inner level uses MAvgConfig.momentum
+    graph            gossip mixing graph: ring | exponential | complete
+                     (all doubly stochastic, so the learner mean is
+                     preserved exactly)
+    momentum_tracking  gossip: also mix the per-learner momentum buffers
+                     with the same matrix (Takezawa et al. 2022)
+    inner_comm       Reducer for the intra-group / neighbor edge class
+                     (None -> MAvgConfig.comm)
+    outer_comm       Reducer for the cross-group edge class — where the
+                     inter-node byte savings land (None -> MAvgConfig.comm)
+    """
+
+    kind: str = "flat"
+    groups: int = 1
+    outer_every: int = 1
+    outer_momentum: float = 0.0
+    graph: str = "ring"
+    momentum_tracking: bool = False
+    inner_comm: Optional[CommConfig] = None
+    outer_comm: Optional[CommConfig] = None
+
+    def __post_init__(self):
+        assert self.kind in TOPOLOGIES, (
+            f"unknown topology {self.kind!r}; choose from {TOPOLOGIES}"
+        )
+        assert self.graph in GOSSIP_GRAPHS, (
+            f"unknown gossip graph {self.graph!r}; choose from {GOSSIP_GRAPHS}"
+        )
+        assert self.groups >= 1 and self.outer_every >= 1
+
+
+@dataclass(frozen=True)
 class MAvgConfig:
     """Hyper-parameters of the paper's Algorithm 1 (+ baselines)."""
 
@@ -256,6 +309,8 @@ class MAvgConfig:
     use_pallas: bool = False  # Pallas kernels on TPU; jnp ref elsewhere
     # meta-communication compression (repro.comm); dense = exact average
     comm: CommConfig = field(default_factory=CommConfig)
+    # meta-level mixing topology (repro.topology); flat = all-reduce
+    topology: TopologyConfig = field(default_factory=TopologyConfig)
 
     def __post_init__(self):
         if self.comm.scheme != "dense" and self.algorithm not in AVERAGING_ALGOS:
@@ -263,6 +318,18 @@ class MAvgConfig:
                 f"comm scheme {self.comm.scheme!r} only applies to the "
                 f"averaging algorithms {AVERAGING_ALGOS}; "
                 f"{self.algorithm!r} communicates through its own update"
+            )
+        t = self.topology
+        if t.kind != "flat" and self.algorithm not in AVERAGING_ALGOS:
+            raise ValueError(
+                f"topology {t.kind!r} only applies to the averaging "
+                f"algorithms {AVERAGING_ALGOS}; {self.algorithm!r} owns its "
+                f"own communication structure"
+            )
+        if t.kind == "hierarchical" and self.num_learners % t.groups:
+            raise ValueError(
+                f"num_learners={self.num_learners} not divisible into "
+                f"groups={t.groups}"
             )
 
 

@@ -24,6 +24,10 @@ That all-reduce is owned by a pluggable ``repro.comm`` Reducer (dense /
 int8 / fp8 / top-k, with optional error feedback whose residual rides in
 ``MetaState.comm_residual`` — DESIGN.md §5), selected via
 ``MAvgConfig.comm`` or injected into ``meta_step``/``make_meta_step``.
+*Which* learners average with which, and how often, is owned by the
+``repro.topology`` subsystem (flat all-reduce / hierarchical two-level
+M-AVG / decentralized gossip — DESIGN.md §7), selected via
+``MAvgConfig.topology``; its buffers ride in ``MetaState.topo``.
 """
 from __future__ import annotations
 
@@ -63,6 +67,9 @@ class MetaState:
     step:          meta iteration n
     comm_residual: per-learner error-feedback residual e_j of the comm
                    reducer (L, ...) f32, or None when EF is off
+    topo:          topology buffer pytree (repro.topology — group params /
+                   momentum under hierarchical, per-learner params /
+                   momentum under gossip), or None under flat
     """
 
     global_params: Any
@@ -72,24 +79,32 @@ class MetaState:
     stale_queue: Any
     step: jnp.ndarray
     comm_residual: Any = None
+    topo: Any = None
 
 
-def init_state(params, cfg: MAvgConfig, reducer=None) -> MetaState:
+def init_state(params, cfg: MAvgConfig, reducer=None,
+               topology=None) -> MetaState:
     """Meta state (w~, v) in cfg.meta_dtype (f32 — Theorem 1's momentum
     variance is precision-sensitive); learner copies in cfg.compute_dtype
     (bf16 on TPU: halves every weight collective and the L-fold copy
     memory; the meta average casts back up to f32).
 
-    Pass the same ``reducer`` you inject into meta_step/make_meta_step (if
-    any) so its error-feedback residual is allocated in comm_residual;
-    otherwise the reducer implied by ``cfg.comm`` decides.
+    Pass the same ``reducer``/``topology`` you inject into
+    meta_step/make_meta_step (if any) so the matching error-feedback /
+    topology buffers are allocated; otherwise ``cfg.comm``/``cfg.topology``
+    decide.
     """
-    from repro.comm import make_reducer
-
     gp = tree_cast(params, cfg.meta_dtype)
     learners = tree_broadcast_learners(
         tree_cast(gp, cfg.compute_dtype), cfg.num_learners
     )
+    comm_residual = topo = None
+    if cfg.algorithm in AVERAGING_ALGOS:
+        if topology is None:
+            from repro.topology import make_topology
+
+            topology = make_topology(cfg, reducer)
+        comm_residual, topo = topology.init_buffers(gp, cfg)
     return MetaState(
         global_params=gp,
         momentum=tree_zeros_like(gp),
@@ -105,12 +120,8 @@ def init_state(params, cfg: MAvgConfig, reducer=None) -> MetaState:
             else None
         ),
         step=jnp.zeros((), jnp.int32),
-        comm_residual=(
-            (make_reducer(cfg) if reducer is None else reducer)
-            .init_residual(gp, cfg.num_learners)
-            if cfg.algorithm in AVERAGING_ALGOS
-            else None
-        ),
+        comm_residual=comm_residual,
+        topo=topo,
     )
 
 
@@ -169,36 +180,16 @@ def _local_phase(loss_fn: LossFn, learners, local_mom, batches, cfg: MAvgConfig,
 # ---------------------------------------------------------------------------
 
 
-def _block_momentum_update(gp, v, avg, cfg: MAvgConfig):
-    """v <- mu v + eta d ; w~ <- w~ + v  (+ optional Nesterov lookahead).
-
-    When cfg.use_pallas is set the fused single-HBM-pass Pallas kernel is
-    used (TPU); otherwise the jnp reference (XLA fuses most of it too).
-    """
-    if cfg.use_pallas:
-        from repro.kernels import ops as kops
-
-        return kops.block_momentum_tree(
-            gp, v, avg, mu=cfg.momentum, eta=cfg.meta_lr, nesterov=cfg.nesterov
-        )
-    d = tree_sub(avg, gp)
-    v = jax.tree.map(lambda vi, di: cfg.momentum * vi + cfg.meta_lr * di, v, d)
-    if cfg.nesterov:
-        gp = jax.tree.map(
-            lambda w, vi, di: w + cfg.momentum * vi + cfg.meta_lr * di, gp, v, d
-        )
-    else:
-        gp = jax.tree.map(jnp.add, gp, v)
-    return gp, v
-
-
 def meta_step(state: MetaState, batches, *, loss_fn: LossFn, cfg: MAvgConfig,
-              lr=None, reducer=None) -> tuple[MetaState, dict]:
+              lr=None, reducer=None, topology=None) -> tuple[MetaState, dict]:
     """One meta-iteration n -> n+1 of Algorithm 1 (or a baseline).
 
     batches: pytree with leaves (L, K, B_local, ...) — K local mini-batches
     for each of the L learners. ``reducer`` overrides the comm scheme
-    built from ``cfg.comm`` (repro.comm.make_reducer).
+    built from ``cfg.comm`` (repro.comm.make_reducer); ``topology``
+    overrides the mixing structure built from ``cfg.topology``
+    (repro.topology.make_topology). Prefer make_meta_step, which builds
+    both once per trace.
     """
     lr = jnp.float32(cfg.learner_lr) if lr is None else lr
     algo = cfg.algorithm
@@ -207,24 +198,18 @@ def meta_step(state: MetaState, batches, *, loss_fn: LossFn, cfg: MAvgConfig,
     )
     gp, v = state.global_params, state.momentum
     comm_res = state.comm_residual
+    topo = state.topo
     metrics = {"loss": loss, "grad_norm": gnorm}
 
     if algo in AVERAGING_ALGOS:
-        mu = 0.0 if algo == "kavg" else cfg.momentum
-        if reducer is None:
-            from repro.comm import make_reducer
+        if topology is None:
+            from repro.topology import make_topology
 
-            reducer = make_reducer(cfg)
-        avg, comm_res, comm_metrics = reducer.reduce(
-            learners, gp, comm_res, step=state.step
+            topology = make_topology(cfg, reducer)
+        gp, v, learners, comm_res, topo, topo_metrics = topology.mix(
+            learners, gp, v, comm_res, topo, step=state.step
         )
-        avg = tree_cast(avg, cfg.meta_dtype)
-        eff = MAvgConfig(**{**cfg.__dict__, "momentum": mu})
-        gp, v = _block_momentum_update(gp, v, avg, eff)
-        learners = tree_broadcast_learners(tree_cast(gp, _ldtype(learners)), cfg.num_learners)
-        metrics["v_norm"] = tree_norm(v)
-        metrics["displacement_norm"] = tree_norm(tree_sub(avg, state.global_params))
-        metrics.update(comm_metrics)
+        metrics.update(topo_metrics)
 
     elif algo == "eamsgd":
         # elastic force toward the center; center gets block momentum.
@@ -265,7 +250,7 @@ def meta_step(state: MetaState, batches, *, loss_fn: LossFn, cfg: MAvgConfig,
         state = MetaState(
             global_params=gp, momentum=v, learners=learners,
             local_momentum=local_mom, stale_queue=queue,
-            step=state.step + 1, comm_residual=comm_res,
+            step=state.step + 1, comm_residual=comm_res, topo=topo,
         )
         metrics["stale_norm"] = tree_norm(d_apply)
         return state, metrics
@@ -275,7 +260,7 @@ def meta_step(state: MetaState, batches, *, loss_fn: LossFn, cfg: MAvgConfig,
     state = MetaState(
         global_params=gp, momentum=v, learners=learners,
         local_momentum=local_mom, stale_queue=state.stale_queue,
-        step=state.step + 1, comm_residual=comm_res,
+        step=state.step + 1, comm_residual=comm_res, topo=topo,
     )
     return state, metrics
 
@@ -284,14 +269,16 @@ def _ldtype(learners):
     return jax.tree.leaves(learners)[0].dtype
 
 
-def make_meta_step(loss_fn: LossFn, cfg: MAvgConfig, reducer=None):
+def make_meta_step(loss_fn: LossFn, cfg: MAvgConfig, reducer=None,
+                   topology=None):
     """Returns a jit-able ``step(state, batches) -> (state, metrics)``.
 
-    The comm reducer is built once here (from ``cfg.comm`` unless one is
-    injected) so every trace reuses the same object.
+    The topology (and through it the comm reducer(s), plus the effective
+    block-momentum coefficient — kavg forces mu = 0) is resolved once
+    here, not per meta_step call, so every trace reuses the same objects.
     """
-    if reducer is None and cfg.algorithm in AVERAGING_ALGOS:
-        from repro.comm import make_reducer
+    if topology is None and cfg.algorithm in AVERAGING_ALGOS:
+        from repro.topology import make_topology
 
-        reducer = make_reducer(cfg)
-    return partial(meta_step, loss_fn=loss_fn, cfg=cfg, reducer=reducer)
+        topology = make_topology(cfg, reducer)
+    return partial(meta_step, loss_fn=loss_fn, cfg=cfg, topology=topology)

@@ -1,0 +1,63 @@
+"""Fused gossip neighbor-mix — one mixing-matrix application over the
+learner stack in a single HBM pass — as a Pallas TPU kernel.
+
+The gossip meta step replaces the global all-reduce with a sparse
+doubly-stochastic mix: out_j = sum_k W_jk x_k over the L learner copies
+(repro.topology.gossip, DESIGN.md §7). Done naively per learner that is L
+reads of the full stack; like block_momentum.py the op has essentially no
+FLOP/byte reuse at small L, so the kernel streams one (L, block, 128)
+VMEM tile of the whole stack per grid step and applies the (L, L) matrix
+as a tiny contraction over the learner dim — every stacked value is read
+once and written once (1 read + 1 write of the L-fold stack).
+
+Layout: callers flatten each (L, ...) leaf to (L, rows, 128) with rows a
+multiple of 8 (ops.py pads); the grid walks row-blocks. The working set is
+2 x L x block x 128 x 4 B (block=256, L=16 -> 4 MiB) inside the ~16 MiB
+VMEM budget. W rides along in full each step — L x L f32 is negligible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+LANES = 128
+
+
+def _kernel(w_ref, x_ref, out_ref):
+    w = w_ref[...]  # (L, L) f32
+    x = x_ref[...].astype(jnp.float32)  # (L, block, 128)
+    L, b, lanes = x.shape
+    mixed = jax.lax.dot_general(
+        w, x.reshape(L, b * lanes), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    out_ref[...] = mixed.reshape(L, b, lanes).astype(out_ref.dtype)
+
+
+def neighbor_mix_3d(x, w, *, interpret: bool = False,
+                    block: int | None = None):
+    """x: (L, rows, 128) with rows % 8 == 0; w: (L, L) row-stochastic.
+
+    Returns the mixed stack, same shape/dtype as x.
+    """
+    L, rows, lanes = x.shape
+    assert lanes == LANES and rows % 8 == 0, x.shape
+    assert w.shape == (L, L), (w.shape, L)
+    if block is None:
+        block = min(BLOCK_ROWS, rows)
+        while rows % block:
+            block //= 2
+    assert rows % block == 0, (rows, block)
+    grid = (rows // block,)
+    spec = pl.BlockSpec((L, block, LANES), lambda i: (0, i, 0))
+    w_spec = pl.BlockSpec((L, L), lambda i: (0, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[w_spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(w.astype(jnp.float32), x)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import block_momentum as _bm
 from repro.kernels import flash_attention as _fa
 from repro.kernels import local_sgd as _sgd
+from repro.kernels import neighbor_mix as _nm
 from repro.kernels import quantize as _q
 from repro.kernels import ref as _ref
 
@@ -76,6 +77,34 @@ def block_momentum_tree(gp, v, avg, *, mu, eta=1.0, nesterov=False,
     return (
         jax.tree_util.tree_unflatten(treedef, new_w),
         jax.tree_util.tree_unflatten(treedef, new_v),
+    )
+
+
+# ---------------------------------------------------------------------------
+# gossip neighbor mix (repro.topology)
+# ---------------------------------------------------------------------------
+
+
+def neighbor_mix(x, w, *, interpret=None):
+    """Mix one (L, ...) learner stack with the (L, L) matrix w in a single
+    HBM pass. Returns sum_k w_jk x_k, same shape/dtype as x."""
+    interpret = _default_interpret() if interpret is None else interpret
+    L = x.shape[0]
+    flat = x.astype(jnp.float32).reshape(L, -1)
+    n = flat.shape[1]
+    rows = -(-n // LANES)
+    rows = -(-rows // 8) * 8
+    x3 = jnp.pad(flat, ((0, 0), (0, rows * LANES - n))).reshape(L, rows, LANES)
+    mixed = _nm.neighbor_mix_3d(x3, w, interpret=interpret)
+    return mixed.reshape(L, -1)[:, :n].reshape(x.shape).astype(x.dtype)
+
+
+def neighbor_mix_tree(tree, w, *, use_pallas=True, interpret=None):
+    """Apply the gossip mix leaf-wise over a stacked (L, ...) pytree."""
+    if not use_pallas:
+        return jax.tree.map(lambda x: _ref.neighbor_mix_ref(x, w), tree)
+    return jax.tree.map(
+        lambda x: neighbor_mix(x, w, interpret=interpret), tree
     )
 
 

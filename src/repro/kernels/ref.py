@@ -57,6 +57,17 @@ def fp8_roundtrip_ref(x, block: int):
     return x8.astype(jnp.float32) * s_full
 
 
+def neighbor_mix_ref(x, w):
+    """Oracle of neighbor_mix.neighbor_mix_3d on an unflattened learner
+    stack: x (L, ...), w (L, L) -> sum_k w_jk x_k, f32 math."""
+    L = x.shape[0]
+    mixed = jnp.einsum(
+        "jk,kn->jn", w.astype(jnp.float32),
+        x.astype(jnp.float32).reshape(L, -1),
+    )
+    return mixed.reshape(x.shape).astype(x.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, sliding_window=0,
                         prefix_global=0):
     """q: (B, S, H, D); k, v: (B, S, KV, D). Full-softmax oracle."""

@@ -14,7 +14,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import InputShape, MAvgConfig, ModelConfig
+from repro.configs.base import (
+    AVERAGING_ALGOS,
+    InputShape,
+    MAvgConfig,
+    ModelConfig,
+)
 from repro.core.meta import MetaState, init_state
 from repro.launch import mesh as meshlib
 from repro.models import api as model_api
@@ -125,6 +130,26 @@ def state_shardings(cfg: ModelConfig, mcfg: MAvgConfig, mesh, *,
 
     # EF residual is per-learner f32 with the learners' shapes -> same specs
     comm_sh = n(learner_specs) if uses_error_feedback(mcfg) else None
+
+    # topology buffers (MetaState.topo): mirror the structure init_state
+    # allocates. Gossip's params/momentum stacks are (L, ...) like the
+    # learners and shard the same way; everything else (G-leading
+    # hierarchical stacks, EF residual stacks) stays replicated — G is
+    # small and the group axis rarely matches a mesh axis size.
+    topo_sh = None
+    if mcfg.algorithm in AVERAGING_ALGOS and mcfg.topology.kind != "flat":
+        from repro.core.meta import init_state as _init_state
+
+        topo_abs = jax.eval_shape(
+            lambda p: _init_state(p, mcfg), abstract_params(cfg)
+        ).topo
+        topo_sh = jax.tree.map(
+            lambda _: NamedSharding(mesh, P()), topo_abs
+        )
+        if mcfg.topology.kind == "gossip":
+            topo_sh["params"] = n(learner_specs)
+            topo_sh["momentum"] = n(learner_specs)
+
     return MetaState(
         global_params=n(gp_specs),
         momentum=n(gp_specs),
@@ -133,6 +158,7 @@ def state_shardings(cfg: ModelConfig, mcfg: MAvgConfig, mesh, *,
         stale_queue=None,
         step=NamedSharding(mesh, P()),
         comm_residual=comm_sh,
+        topo=topo_sh,
     )
 
 

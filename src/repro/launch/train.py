@@ -19,7 +19,17 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import CommConfig, MAvgConfig, TrainConfig, get_config
+from repro.configs.base import (
+    ALGORITHMS,
+    COMM_SCHEMES,
+    GOSSIP_GRAPHS,
+    TOPOLOGIES,
+    CommConfig,
+    MAvgConfig,
+    TopologyConfig,
+    TrainConfig,
+    get_config,
+)
 from repro.core.trainer import Trainer
 from repro.data import lm_batch_fn, lm_eval_set
 from repro.models import api as model_api
@@ -29,9 +39,9 @@ from repro.optim import warmup_cosine
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
-    ap.add_argument("--algorithm", default="mavg",
-                    choices=["mavg", "kavg", "sync", "mavg_mlocal", "eamsgd",
-                             "downpour"])
+    # choices derive from the configs/base.py constants so new algorithms /
+    # schemes / topologies show up here without hand-maintained duplication
+    ap.add_argument("--algorithm", default="mavg", choices=ALGORITHMS)
     ap.add_argument("--learners", type=int, default=4)
     ap.add_argument("--k", type=int, default=4)
     ap.add_argument("--steps", type=int, default=30)
@@ -42,13 +52,24 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="full-scale config (TPU pod required)")
     ap.add_argument("--checkpoint-dir", default=None)
-    ap.add_argument("--comm", default="dense",
-                    choices=["dense", "int8", "fp8", "topk", "int8_topk"],
+    ap.add_argument("--comm", default="dense", choices=COMM_SCHEMES,
                     help="meta-communication compression scheme (repro.comm)")
     ap.add_argument("--comm-k-frac", type=float, default=0.1,
                     help="kept fraction for the top-k comm schemes")
     ap.add_argument("--no-error-feedback", action="store_true",
                     help="disable the comm error-feedback residual")
+    ap.add_argument("--topology", default="flat", choices=TOPOLOGIES,
+                    help="meta-level mixing topology (repro.topology)")
+    ap.add_argument("--groups", type=int, default=1,
+                    help="hierarchical: number of learner groups G")
+    ap.add_argument("--outer-every", type=int, default=1,
+                    help="hierarchical: cross-group average every H meta steps")
+    ap.add_argument("--outer-momentum", type=float, default=0.0,
+                    help="hierarchical: block momentum of the outer level")
+    ap.add_argument("--gossip-graph", default="ring", choices=GOSSIP_GRAPHS,
+                    help="gossip: mixing graph")
+    ap.add_argument("--outer-comm", default=None, choices=COMM_SCHEMES,
+                    help="cross-group comm scheme (default: same as --comm)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -59,11 +80,21 @@ def main() -> None:
             f"{args.arch} uses stub-frontend inputs; use examples/ for it"
         )
 
+    outer_comm = (
+        CommConfig(scheme=args.outer_comm, k_frac=args.comm_k_frac,
+                   error_feedback=not args.no_error_feedback)
+        if args.outer_comm else None
+    )
     mcfg = MAvgConfig(
         algorithm=args.algorithm, num_learners=args.learners, k_steps=args.k,
         learner_lr=args.lr, momentum=args.momentum,
         comm=CommConfig(scheme=args.comm, k_frac=args.comm_k_frac,
                         error_feedback=not args.no_error_feedback),
+        topology=TopologyConfig(
+            kind=args.topology, groups=args.groups,
+            outer_every=args.outer_every, outer_momentum=args.outer_momentum,
+            graph=args.gossip_graph, outer_comm=outer_comm,
+        ),
     )
     tcfg = TrainConfig(
         model=cfg, mavg=mcfg, batch_per_learner=args.batch, seq_len=args.seq,

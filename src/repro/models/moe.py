@@ -34,6 +34,21 @@ EXPERT_AXIS = None
 SHARD_MAP_MESH = None  # set by launchers to the active Mesh
 
 
+def _shard_map(fn, *, mesh, in_specs, out_specs, axis_names):
+    """Version-compatible shard_map: ``jax.shard_map`` (new API, takes
+    ``axis_names``) when present, else ``jax.experimental.shard_map`` where
+    the equivalent is the complement ``auto`` axis set."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=axis_names)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    # Older JAX has no axis_names= (and its partial-auto mode trips XLA's
+    # "PartitionId not supported for SPMD partitioning"); run fully manual —
+    # axes absent from the specs are replicated, which matches these specs.
+    return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
 def set_expert_axis(axis, mesh=None):
     global EXPERT_AXIS, SHARD_MAP_MESH
     EXPERT_AXIS = axis
@@ -69,12 +84,24 @@ def init_moe(key, cfg: ModelConfig) -> dict:
     return p
 
 
-def _capacity(num_tokens: int, cfg: ModelConfig) -> int:
-    c = int(num_tokens * cfg.moe_top_k * cfg.capacity_factor / cfg.num_experts)
+def _capacity(num_tokens: int, cfg: ModelConfig, dropless: bool = False) -> int:
+    """Per-expert capacity. ``dropless=True`` (serving paths) sizes the
+    buffer for the worst case so no token is ever dropped: batched
+    prefill logits then match token-by-token decode exactly
+    (tests/test_decode_consistency.py), which capacity dropping breaks (a
+    drop depends on the *other* tokens in the batch). top_k indices are
+    distinct per token, so one expert receives at most ``num_tokens``
+    slots — that bound, not num_tokens * k, keeps the dispatch buffer
+    E x T instead of E x T*k (ragged dropless dispatch to shrink this
+    further is a ROADMAP open item)."""
+    if dropless:
+        c = num_tokens
+    else:
+        c = int(num_tokens * cfg.moe_top_k * cfg.capacity_factor / cfg.num_experts)
     return max(8, -(-c // 8) * 8)  # round up to 8, floor of 8
 
 
-def _route(xt, p, cfg: ModelConfig):
+def _route(xt, p, cfg: ModelConfig, dropless: bool = False):
     """Router + capacity assignment (shared by both execution paths).
 
     Returns (gates (T,k), slot_expert (T*k,), pos_clamped, keep, aux).
@@ -93,7 +120,7 @@ def _route(xt, p, cfg: ModelConfig):
     aux = E * jnp.sum(me * ce) * cfg.moe_aux_coef
 
     # dispatch: slot s = (t, j) -> (expert, position-in-capacity)
-    C = _capacity(T, cfg)
+    C = _capacity(T, cfg, dropless)
     slot_expert = idx.reshape(-1)  # (T*k,)
     onehot = jax.nn.one_hot(slot_expert, E, dtype=jnp.int32)  # (T*k, E)
     pos_in_e = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1  # (T*k,)
@@ -102,7 +129,7 @@ def _route(xt, p, cfg: ModelConfig):
     return gates, slot_expert, pos_clamped, keep, aux, C
 
 
-def moe_layer(x, p, cfg: ModelConfig):
+def moe_layer(x, p, cfg: ModelConfig, dropless: bool = False):
     """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
     B, S, d = x.shape
     E, k = cfg.num_experts, cfg.moe_top_k
@@ -110,7 +137,7 @@ def moe_layer(x, p, cfg: ModelConfig):
     xt = x.reshape(T, d)
     dt = x.dtype
 
-    gates, slot_expert, pos_clamped, keep, aux, C = _route(xt, p, cfg)
+    gates, slot_expert, pos_clamped, keep, aux, C = _route(xt, p, cfg, dropless)
 
     if SHARD_MAP_MESH is not None and EXPERT_AXIS is not None:
         out = _experts_shard_map(
@@ -214,7 +241,7 @@ def _experts_shard_map(xt, p, cfg: ModelConfig, gates, slot_expert,
         return jax.lax.psum(part.astype(jnp.float32), EXPERT_AXIS).astype(dt)
 
     rep = P_()
-    fn = jax.shard_map(
+    fn = _shard_map(
         local,
         mesh=mesh,
         in_specs=(P_(None, None), P_(None, None), rep, rep, rep,

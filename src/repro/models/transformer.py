@@ -81,14 +81,15 @@ def set_remat_policy(name: str) -> None:
     }[name]
 
 
-def _block_fwd(x, bp, cfg: ModelConfig, positions, moe: bool, use_pallas: bool):
+def _block_fwd(x, bp, cfg: ModelConfig, positions, moe: bool, use_pallas: bool,
+               dropless: bool = False):
     h = x + L.attention_block(
         L.rmsnorm(x, bp["attn_norm"], cfg.norm_eps), bp["attn"], cfg, positions,
         use_pallas=use_pallas,
     )
     hn = L.rmsnorm(h, bp["mlp_norm"], cfg.norm_eps)
     if moe:
-        y, aux = moe_layer(hn, bp["moe"], cfg)
+        y, aux = moe_layer(hn, bp["moe"], cfg, dropless)
     else:
         y, aux = L.swiglu(hn, bp["mlp"]), jnp.float32(0.0)
     return h + y, aux
@@ -126,8 +127,13 @@ def _embed_inputs(params, cfg: ModelConfig, batch):
     return x, mask
 
 
-def forward(params, cfg: ModelConfig, batch, *, use_pallas: bool = False):
-    """-> (logits (B, S_total, V) f32, aux dict)."""
+def forward(params, cfg: ModelConfig, batch, *, use_pallas: bool = False,
+            train: bool = False):
+    """-> (logits (B, S_total, V) f32, aux dict).
+
+    ``train=True`` (the loss path) keeps MoE capacity dropping; serving /
+    eval callers get the dropless dispatch so batched logits match
+    token-by-token decode (see moe._capacity)."""
     x, mask = _embed_inputs(params, cfg, batch)
     S = x.shape[1]
     positions = jnp.arange(S)
@@ -139,7 +145,8 @@ def forward(params, cfg: ModelConfig, batch, *, use_pallas: bool = False):
         @partial(jax.checkpoint, policy=REMAT_POLICY)
         def step(carry, bp):
             x, aux = carry
-            x, a = _block_fwd(x, bp, cfg, positions, moe, use_pallas)
+            x, a = _block_fwd(x, bp, cfg, positions, moe, use_pallas,
+                              dropless=not train)
             return (x, aux + a), None
 
         (x, aux), _ = lax.scan(step, (x, jnp.float32(0.0)), stack)
@@ -157,7 +164,8 @@ def forward(params, cfg: ModelConfig, batch, *, use_pallas: bool = False):
 
 def loss_fn(params, cfg: ModelConfig, batch, *, use_pallas: bool = False):
     """Causal-LM loss (next-token) or masked-prediction loss (encoder)."""
-    logits, aux = forward(params, cfg, batch, use_pallas=use_pallas)
+    logits, aux = forward(params, cfg, batch, use_pallas=use_pallas,
+                          train=True)
     labels = batch["labels"]
     if cfg.is_encoder_only:
         # masked prediction at positions given by labels>=0 (hubert-style)
@@ -211,7 +219,7 @@ def prefill(params, cfg: ModelConfig, batch, cache_len: int, *,
             h = x + a_out
             hn2 = L.rmsnorm(h, bp["mlp_norm"], cfg.norm_eps)
             if moe:
-                y, _ = moe_layer(hn2, bp["moe"], cfg)
+                y, _ = moe_layer(hn2, bp["moe"], cfg, dropless=True)
             else:
                 y = L.swiglu(hn2, bp["mlp"])
             return h + y, (place(k).astype(dt), place(v).astype(dt))
@@ -277,7 +285,7 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, *, use_pallas: bool = F
             h = x + a_out
             hn2 = L.rmsnorm(h, bp["mlp_norm"], cfg.norm_eps)
             if moe:
-                y, _ = moe_layer(hn2, bp["moe"], cfg)
+                y, _ = moe_layer(hn2, bp["moe"], cfg, dropless=True)
             else:
                 y = L.swiglu(hn2, bp["mlp"])
             return h + y, (kc, vc)

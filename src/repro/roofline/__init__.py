@@ -1,5 +1,6 @@
 from repro.roofline.hlo import collective_bytes, split_computations
 from repro.roofline.terms import (
+    DCN_LINK_BW,
     HBM_BW,
     ICI_LINK_BW,
     PEAK_FLOPS_BF16,
@@ -7,4 +8,6 @@ from repro.roofline.terms import (
     compute_terms,
     meta_wire_bytes,
     model_flops,
+    participant_wire_bytes,
+    topology_wire_bytes,
 )

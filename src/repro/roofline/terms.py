@@ -26,7 +26,8 @@ from repro.configs.base import CommConfig, InputShape, ModelConfig
 # TPU v5e per-chip constants (from the spec)
 PEAK_FLOPS_BF16 = 197e12  # FLOP/s
 HBM_BW = 819e9  # B/s
-ICI_LINK_BW = 50e9  # B/s per link
+ICI_LINK_BW = 50e9  # B/s per link (fast intra-node edge class)
+DCN_LINK_BW = 25e9  # B/s per host (slow inter-node edge class, ~200 Gb/s)
 
 
 @dataclass
@@ -48,26 +49,29 @@ class RooflineTerms:
     wire_bytes: float = 0.0
     wire_s: float = 0.0
     comm_scheme: str = "dense"
+    # per-edge-class split (repro.topology): intra-node (ICI) vs
+    # inter-node (DCN) payload per meta step, amortized over outer_every
+    wire_intra_bytes: float = 0.0
+    wire_inter_bytes: float = 0.0
+    topology: str = "flat"
 
     def to_dict(self):
         return asdict(self)
 
 
-def meta_wire_bytes(n_params: int, comm: Optional[CommConfig], *,
-                    num_learners: int, learner_bytes: int = 4) -> tuple[float, float]:
-    """(dense_bytes, wire_bytes) of one meta averaging round.
+def participant_wire_bytes(n_params: int, comm: Optional[CommConfig], *,
+                           learner_bytes: int = 4) -> float:
+    """Payload ONE participant ships under ``comm`` (per meta round).
 
     Analytic model matching repro.comm's per-step accounting (the
     bytes-per-value/scale/index constants are imported from there so the
-    two can't drift): every learner ships its (possibly compressed)
-    displacement; scales are one f32 per chunk_rows x 128 values.
+    two can't drift); scales are one f32 per chunk_rows x 128 values.
     """
     from repro.comm.quant import SCALE_BYTES, VALUE_BYTES
     from repro.comm.topk import INDEX_BYTES
 
-    dense = float(num_learners * n_params * learner_bytes)
     if comm is None or comm.scheme == "dense":
-        return dense, dense
+        return float(n_params * learner_bytes)
     n_chunks = max(1.0, n_params / (comm.chunk_rows * 128))
     if comm.scheme in VALUE_BYTES:
         per = n_params * VALUE_BYTES[comm.scheme] + n_chunks * SCALE_BYTES
@@ -78,7 +82,59 @@ def meta_wire_bytes(n_params: int, comm: Optional[CommConfig], *,
                + n_chunks * SCALE_BYTES)
     else:
         raise ValueError(f"unknown comm scheme {comm.scheme!r}")
-    return dense, float(num_learners * per)
+    return float(per)
+
+
+def meta_wire_bytes(n_params: int, comm: Optional[CommConfig], *,
+                    num_learners: int, learner_bytes: int = 4) -> tuple[float, float]:
+    """(dense_bytes, wire_bytes) of one *flat* meta averaging round:
+    every learner ships its (possibly compressed) displacement."""
+    dense = float(num_learners * n_params * learner_bytes)
+    wire = num_learners * participant_wire_bytes(
+        n_params, comm, learner_bytes=learner_bytes
+    )
+    return dense, wire
+
+
+def topology_wire_bytes(n_params: int, comm: Optional[CommConfig],
+                        topology, *, num_learners: int,
+                        learner_bytes: int = 4) -> dict:
+    """Per-edge-class wire model of one meta iteration (amortized).
+
+    Returns {"intra_bytes", "inter_bytes", "total_bytes"} — bytes crossing
+    the fast intra-node links vs the slow inter-node links per meta step,
+    under the given ``TopologyConfig`` (None -> flat):
+
+    flat          every learner's displacement feeds a global all-reduce —
+                  all of it is modeled as inter-node (the paper's worst
+                  case, what K amortizes)
+    hierarchical  L intra-group payloads (inner_comm) every step; G
+                  cross-group payloads (outer_comm) every outer_every
+                  steps, amortized
+    gossip        every learner ships to each of its degree(graph)
+                  neighbors every step — inter-node, no amortization
+    """
+    L = num_learners
+    per = lambda c: participant_wire_bytes(n_params, c,
+                                           learner_bytes=learner_bytes)
+    if topology is None or topology.kind == "flat":
+        inter = L * per(comm)
+        intra = 0.0
+    elif topology.kind == "hierarchical":
+        intra = L * per(topology.inner_comm or comm)
+        inter = (topology.groups * per(topology.outer_comm or comm)
+                 / topology.outer_every)
+    elif topology.kind == "gossip":
+        from repro.topology import graph_degree
+
+        intra = 0.0
+        inter = L * graph_degree(topology.graph, L) * per(
+            topology.inner_comm or comm
+        )
+    else:
+        raise ValueError(f"unknown topology {topology.kind!r}")
+    return {"intra_bytes": float(intra), "inter_bytes": float(inter),
+            "total_bytes": float(intra + inter)}
 
 
 def model_flops(cfg: ModelConfig, shape: InputShape, k_steps: int = 1) -> float:
@@ -98,7 +154,7 @@ def compute_terms(*, arch: str, shape: InputShape, mesh_name: str, chips: int,
                   hlo_flops: float, hlo_bytes: float, collective_bytes: float,
                   cfg: ModelConfig, k_steps: int = 1,
                   per_device: bool = True, comm: Optional[CommConfig] = None,
-                  num_learners: int = 1) -> RooflineTerms:
+                  num_learners: int = 1, topology=None) -> RooflineTerms:
     """per_device=True: the HLO numbers come from the SPMD-partitioned
     module, i.e. they are already per-chip (this is what
     ``compiled.as_text()`` exposes). The spec formula X/(chips*rate) with
@@ -111,12 +167,16 @@ def compute_terms(*, arch: str, shape: InputShape, mesh_name: str, chips: int,
     terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
     bottleneck = max(terms, key=terms.get)
     mf_dev = mf / chips if per_device else mf
-    wire_bytes = wire_s = 0.0
-    if comm is not None:
-        _, wire_bytes = meta_wire_bytes(
-            cfg.param_count(), comm, num_learners=num_learners
+    wire_bytes = wire_s = intra_b = inter_b = 0.0
+    if comm is not None or topology is not None:
+        edge = topology_wire_bytes(
+            cfg.param_count(), comm, topology, num_learners=num_learners
         )
-        wire_s = wire_bytes / (chips * ICI_LINK_BW)
+        intra_b, inter_b = edge["intra_bytes"], edge["inter_bytes"]
+        wire_bytes = edge["total_bytes"]
+        # each edge class rides its own fabric
+        wire_s = (intra_b / (chips * ICI_LINK_BW)
+                  + inter_b / (chips * DCN_LINK_BW))
     return RooflineTerms(
         arch=arch,
         shape=shape.name,
@@ -134,4 +194,7 @@ def compute_terms(*, arch: str, shape: InputShape, mesh_name: str, chips: int,
         wire_bytes=wire_bytes,
         wire_s=wire_s,
         comm_scheme=comm.scheme if comm is not None else "dense",
+        wire_intra_bytes=intra_b,
+        wire_inter_bytes=inter_b,
+        topology=topology.kind if topology is not None else "flat",
     )

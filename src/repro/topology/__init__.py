@@ -1,0 +1,47 @@
+# Meta-level mixing topologies: who averages with whom, how often
+# (DESIGN.md §7). The factory is keyed on MAvgConfig.topology and composes
+# with repro.comm — each edge class carries its own Reducer.
+from repro.topology.base import (
+    FlatAllReduce,
+    Topology,
+    block_momentum_update,
+    effective_momentum,
+)
+from repro.topology.gossip import (
+    Gossip,
+    compress_stack,
+    graph_degree,
+    mixing_matrix,
+)
+from repro.topology.hierarchical import Hierarchical
+
+
+def make_topology(cfg, reducer=None) -> Topology:
+    """Build the topology described by ``cfg.topology`` (an MAvgConfig).
+
+    ``reducer`` overrides the primary reducer (flat: the all-reduce;
+    hierarchical: intra-group; gossip: neighbor exchange) — the same
+    injection point meta_step/make_meta_step always exposed.
+    """
+    kind = cfg.topology.kind
+    if kind == "flat":
+        return FlatAllReduce(cfg, reducer)
+    if kind == "hierarchical":
+        return Hierarchical(cfg, reducer)
+    if kind == "gossip":
+        return Gossip(cfg, reducer)
+    raise ValueError(f"unknown topology {kind!r}")
+
+
+__all__ = [
+    "FlatAllReduce",
+    "Gossip",
+    "Hierarchical",
+    "Topology",
+    "block_momentum_update",
+    "compress_stack",
+    "effective_momentum",
+    "graph_degree",
+    "make_topology",
+    "mixing_matrix",
+]

@@ -1,0 +1,125 @@
+"""The Topology protocol: who averages with whom, how often.
+
+The paper's meta step is one *flat* all-reduce every K local steps —
+every learner averages with every other learner. This subsystem makes
+that structure a first-class, swappable object (DESIGN.md §7), the same
+way ``repro.comm`` did for what goes on the wire:
+
+    mix(learners, gp, v, comm_residual, topo, step=n)
+        -> (gp', v', learners', comm_residual', topo', metrics)
+
+``learners`` is the stacked (L, ...) learner pytree after the K local
+steps; ``gp``/``v`` are the meta params w~ and block momentum; ``topo``
+is the topology's own buffer pytree riding in ``MetaState.topo`` (group
+params/momentum for Hierarchical, per-learner params/momentum for
+Gossip; None for flat). Each topology owns its Reducer(s), so every edge
+class can carry its own compression scheme — dense intra-group,
+int8_topk cross-group is where the inter-node byte savings land.
+
+Topologies are built once per trace by ``make_topology`` (see
+``repro.topology``), which also resolves the *effective* block-momentum
+coefficient (kavg is mavg with mu forced to 0 — Remark 2) at
+construction instead of per meta_step call.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.configs.base import MAvgConfig
+from repro.utils import (
+    tree_broadcast_learners,
+    tree_cast,
+    tree_norm,
+    tree_sub,
+)
+
+
+def effective_momentum(cfg: MAvgConfig) -> float:
+    """mu actually applied by the meta update: kavg is mavg with mu = 0."""
+    return 0.0 if cfg.algorithm == "kavg" else cfg.momentum
+
+
+def block_momentum_update(gp, v, avg, *, mu, eta=1.0, nesterov=False,
+                          use_pallas=False):
+    """v <- mu v + eta d ; w~ <- w~ + v  (+ optional Nesterov lookahead).
+
+    Works on plain pytrees and on (G, ...)/(L, ...) stacked trees — the
+    update is elementwise. ``use_pallas`` routes through the fused
+    single-HBM-pass kernel (kernels/block_momentum.py).
+    """
+    import jax.numpy as jnp
+
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        return kops.block_momentum_tree(
+            gp, v, avg, mu=mu, eta=eta, nesterov=nesterov
+        )
+    d = tree_sub(avg, gp)
+    v = jax.tree.map(lambda vi, di: mu * vi + eta * di, v, d)
+    if nesterov:
+        gp = jax.tree.map(
+            lambda w, vi, di: w + mu * vi + eta * di, gp, v, d
+        )
+    else:
+        gp = jax.tree.map(jnp.add, gp, v)
+    return gp, v
+
+
+def learner_dtype(learners):
+    return jax.tree.leaves(learners)[0].dtype
+
+
+class Topology:
+    """Base: one meta-level mixing step over the learner stack."""
+
+    name = "topology"
+
+    def init_buffers(self, gp, cfg: MAvgConfig) -> tuple[Any, Any]:
+        """(comm_residual, topo) buffers for MetaState (None = unused)."""
+        return None, None
+
+    def mix(self, learners, gp, v, comm_residual, topo, *, step):
+        raise NotImplementedError
+
+
+class FlatAllReduce(Topology):
+    """Current behavior, extracted: one global average + block momentum.
+
+    All traffic is a single all-reduce over every learner — under the
+    wire model every byte crosses the slow inter-node links.
+    """
+
+    name = "flat"
+
+    def __init__(self, cfg: MAvgConfig, reducer=None):
+        from repro.comm import make_reducer
+
+        self.cfg = cfg
+        self.mu = effective_momentum(cfg)
+        self.reducer = make_reducer(cfg) if reducer is None else reducer
+
+    def init_buffers(self, gp, cfg: MAvgConfig):
+        return self.reducer.init_residual(gp, cfg.num_learners), None
+
+    def mix(self, learners, gp, v, comm_residual, topo, *, step):
+        cfg = self.cfg
+        avg, comm_residual, comm_metrics = self.reducer.reduce(
+            learners, gp, comm_residual, step=step
+        )
+        avg = tree_cast(avg, cfg.meta_dtype)
+        gp_new, v = block_momentum_update(
+            gp, v, avg, mu=self.mu, eta=cfg.meta_lr, nesterov=cfg.nesterov,
+            use_pallas=cfg.use_pallas,
+        )
+        learners = tree_broadcast_learners(
+            tree_cast(gp_new, learner_dtype(learners)), cfg.num_learners
+        )
+        metrics = {
+            "v_norm": tree_norm(v),
+            "displacement_norm": tree_norm(tree_sub(avg, gp)),
+        }
+        metrics.update(comm_metrics)
+        return gp_new, v, learners, comm_residual, topo, metrics

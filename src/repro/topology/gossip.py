@@ -1,0 +1,213 @@
+"""Decentralized gossip: sparse doubly-stochastic mixing, no global state.
+
+Instead of one all-reduce onto shared meta params, every learner keeps
+its *own* meta params x_j and mixes with its graph neighbors each meta
+step: m_j = sum_k W_jk x_k. Because W is doubly stochastic the learner
+mean is preserved exactly (the consensus the convergence analyses track),
+and Takezawa et al. 2022 (Momentum Tracking, PAPERS.md) show block-style
+momentum survives — and helps — under such sparse mixing; the optional
+``momentum_tracking`` flag additionally mixes the per-learner momentum
+buffers with the same W.
+
+State (MetaState.topo):
+    params    x_j (L, ...) f32 — per-learner meta params
+    momentum  v_j (L, ...) f32 — per-learner block momentum
+    residual  per-learner error-feedback residual or None
+
+Per meta step (after the K local steps produce w_j from x_j):
+    delta_j = w_j - x_j            (+ EF residual)
+    m_j     = sum_k W_jk (x_k + C(delta_k))     -- the gossip exchange
+    v_j     = mu v_j + eta (m_j - x_j)          [then v <- W v if tracking]
+    x_j    += v_j ; learner j resets to x_j
+
+``MetaState.global_params`` tracks mean_j x_j (what checkpoints/eval
+see); with the complete graph and mu = 0 the update is exactly kavg's
+all-reduce average (pinned in tests/test_topology.py). The mix itself is
+the fused one-HBM-pass Pallas kernel (kernels/neighbor_mix.py) under
+``use_pallas``, jnp oracle otherwise.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import (
+    CompressedReducer,
+    DenseReducer,
+    ErrorFeedback,
+    dense_bytes,
+    make_reducer_for,
+)
+from repro.configs.base import MAvgConfig
+from repro.topology.base import (
+    Topology,
+    block_momentum_update,
+    effective_momentum,
+    learner_dtype,
+)
+from repro.utils import (
+    tree_add,
+    tree_cast,
+    tree_mean_axis0,
+    tree_norm,
+    tree_sub,
+    tree_zeros_like,
+)
+
+
+# ---------------------------------------------------------------------------
+# mixing matrices (all symmetric circulant -> doubly stochastic)
+# ---------------------------------------------------------------------------
+
+
+def _neighbor_offsets(graph: str, L: int) -> set[int]:
+    if L <= 1:
+        return set()
+    if graph == "complete":
+        return set(range(1, L))
+    if graph == "ring":
+        return {1 % L, (L - 1) % L} - {0}
+    if graph == "exponential":
+        offs = set()
+        p = 1
+        while p < L:
+            offs.add(p)
+            offs.add((L - p) % L)
+            p *= 2
+        return offs - {0}
+    raise ValueError(f"unknown gossip graph {graph!r}")
+
+
+def graph_degree(graph: str, L: int) -> int:
+    """Out-degree (neighbors excluding self) — the wire-bytes multiplier."""
+    return len(_neighbor_offsets(graph, L))
+
+
+def mixing_matrix(graph: str, L: int) -> np.ndarray:
+    """(L, L) symmetric doubly-stochastic W with uniform edge weights
+    1/(deg+1) over self + graph neighbors."""
+    offs = _neighbor_offsets(graph, L)
+    w = 1.0 / (len(offs) + 1)
+    W = np.zeros((L, L), np.float32)
+    for j in range(L):
+        W[j, j] = w
+        for o in offs:
+            W[j, (j + o) % L] += w
+    return W
+
+
+# ---------------------------------------------------------------------------
+# per-learner compression (the reducer's compress stage without the mean)
+# ---------------------------------------------------------------------------
+
+
+def compress_stack(reducer, delta, residual, *, step, learners):
+    """C(delta_j) per learner + EF residual algebra, without averaging.
+
+    Gossip ships each learner's displacement to its neighbors instead of
+    into a global mean, so it needs the reducer's compression stage alone.
+    Returns (c, residual', wire_bytes).
+    """
+    if isinstance(reducer, ErrorFeedback):
+        if residual is None:
+            raise ValueError(
+                "ErrorFeedback gossip reducer got residual=None — build the "
+                "MetaState with the same topology (init_state allocates the "
+                "residual in MetaState.topo)."
+            )
+        delta = tree_add(delta, residual)
+        c, wire = reducer.inner._compress(delta, step)
+        return c, tree_sub(delta, c), wire
+    if isinstance(reducer, CompressedReducer):
+        c, wire = reducer._compress(delta, step)
+        return c, residual, wire
+    assert isinstance(reducer, DenseReducer), reducer
+    return delta, residual, dense_bytes(learners)
+
+
+class Gossip(Topology):
+    name = "gossip"
+
+    def __init__(self, cfg: MAvgConfig, reducer=None):
+        t = cfg.topology
+        self.cfg = cfg
+        self.mu = effective_momentum(cfg)
+        self.graph = t.graph
+        self.momentum_tracking = t.momentum_tracking
+        self.reducer = (
+            reducer if reducer is not None
+            else make_reducer_for(t.inner_comm or cfg.comm, cfg.meta_dtype)
+        )
+        self.W = mixing_matrix(t.graph, cfg.num_learners)
+        self.degree = graph_degree(t.graph, cfg.num_learners)
+
+    # ------------------------------------------------------------------
+    def init_buffers(self, gp, cfg: MAvgConfig):
+        L = cfg.num_learners
+        params = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (L,) + x.shape)
+            .astype(jnp.dtype(cfg.meta_dtype)), gp
+        )
+        topo = {
+            "params": params,
+            "momentum": tree_zeros_like(params),
+            "residual": self.reducer.init_residual(gp, L),
+        }
+        return None, topo
+
+    # ------------------------------------------------------------------
+    def _mix_tree(self, tree):
+        from repro.kernels import ops as kops
+
+        return kops.neighbor_mix_tree(
+            tree, jnp.asarray(self.W), use_pallas=self.cfg.use_pallas
+        )
+
+    def mix(self, learners, gp, v, comm_residual, topo, *, step):
+        cfg = self.cfg
+        ldt = learner_dtype(learners)
+        xp = topo["params"]  # (L, ...) f32
+
+        delta = jax.tree.map(
+            lambda w, x: w.astype(jnp.float32) - x.astype(jnp.float32),
+            learners, xp,
+        )
+        c, residual, wire = compress_stack(
+            self.reducer, delta, topo["residual"], step=step,
+            learners=learners,
+        )
+        x_hat = tree_add(tree_cast(xp, jnp.float32), c)
+        mixed = tree_cast(self._mix_tree(x_hat), cfg.meta_dtype)
+
+        vL = topo["momentum"]
+        xp_new, vL = block_momentum_update(
+            xp, vL, mixed, mu=self.mu, eta=cfg.meta_lr,
+            nesterov=cfg.nesterov, use_pallas=cfg.use_pallas,
+        )
+        if self.momentum_tracking:
+            # momentum-tracking correction: mix the momentum buffers with
+            # the same W so the momentum consensus follows the param one
+            vL = self._mix_tree(vL)
+
+        learners = tree_cast(xp_new, ldt)
+        gp_new = tree_cast(tree_mean_axis0(xp_new), cfg.meta_dtype)
+
+        db = dense_bytes(learners)
+        consensus = tree_norm(
+            tree_sub(xp_new, jax.tree.map(
+                lambda m, x: jnp.broadcast_to(m[None], x.shape), gp_new, xp_new
+            ))
+        )
+        topo = {"params": xp_new, "momentum": vL, "residual": residual}
+        metrics = {
+            "v_norm": tree_norm(vL),
+            "displacement_norm": tree_norm(tree_sub(mixed, xp)),
+            "consensus_dist": consensus,
+            # every learner ships its (compressed) displacement to each of
+            # its `degree` neighbors, every meta step — all inter-node
+            "comm_bytes": wire * self.degree,
+            "comm_bytes_dense": db * self.degree,
+        }
+        return gp_new, v, learners, comm_residual, topo, metrics

@@ -1,0 +1,169 @@
+"""Two-level M-AVG: learners partitioned into G groups.
+
+Real pods are hierarchical — fast intra-node links, slow inter-node
+links. This topology averages *within* each group every meta step (K
+local steps) and *across* groups only every H meta steps, so the slow
+edge class is touched once per K·H local steps. Each level runs its own
+block momentum (mu_in = MAvgConfig.momentum on the group params, mu_out
+= TopologyConfig.outer_momentum on the global params) — the two-level
+momentum recursion of DESIGN.md §7 — and its own Reducer, so the
+cross-group displacement can ship int8_topk while intra-group stays
+dense.
+
+State (MetaState.topo):
+    group_params    w~_g (G, ...) f32 — per-group meta params
+    group_momentum  v_g  (G, ...) f32 — inner block momentum
+    inner_residual  per-group error-feedback stacks (G, S, ...) or None
+    outer_residual  cross-group EF residual (G, ...) or None
+
+The outer update applies the displacement A - w~ with unit step
+(eta_out = 1), so outer_every=1 + outer_momentum=0 is an exact
+pass-through of the inner level: Hierarchical(groups=1) reproduces flat
+mavg bit-for-bit at any meta_lr (pinned in tests/test_topology.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.comm import dense_bytes, make_reducer_for
+from repro.configs.base import MAvgConfig
+from repro.topology.base import (
+    Topology,
+    block_momentum_update,
+    effective_momentum,
+    learner_dtype,
+)
+from repro.utils import tree_cast, tree_norm, tree_sub, tree_zeros_like
+
+
+class Hierarchical(Topology):
+    name = "hierarchical"
+
+    def __init__(self, cfg: MAvgConfig, reducer=None):
+        t = cfg.topology
+        assert cfg.num_learners % t.groups == 0, (cfg.num_learners, t.groups)
+        self.cfg = cfg
+        self.G = t.groups
+        self.S = cfg.num_learners // t.groups
+        self.H = t.outer_every
+        self.mu_in = effective_momentum(cfg)
+        self.mu_out = t.outer_momentum
+        self.inner_reducer = (
+            reducer if reducer is not None
+            else make_reducer_for(t.inner_comm or cfg.comm, cfg.meta_dtype)
+        )
+        self.outer_reducer = make_reducer_for(
+            t.outer_comm or cfg.comm, cfg.meta_dtype
+        )
+
+    # ------------------------------------------------------------------
+    def init_buffers(self, gp, cfg: MAvgConfig):
+        G = self.G
+        gparams = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (G,) + x.shape)
+            .astype(jnp.dtype(cfg.meta_dtype)), gp
+        )
+        inner_res = self.inner_reducer.init_residual(gp, self.S)
+        if inner_res is not None:  # stack the per-group EF residuals
+            inner_res = jax.tree.map(
+                lambda x: jnp.zeros((G,) + x.shape, x.dtype), inner_res
+            )
+        topo = {
+            "group_params": gparams,
+            "group_momentum": tree_zeros_like(gparams),
+            "inner_residual": inner_res,
+            "outer_residual": self.outer_reducer.init_residual(gp, G),
+        }
+        return None, topo
+
+    # ------------------------------------------------------------------
+    def mix(self, learners, gp, v, comm_residual, topo, *, step):
+        cfg = self.cfg
+        G, S = self.G, self.S
+        ldt = learner_dtype(learners)
+        gparams = topo["group_params"]
+        gmom = topo["group_momentum"]
+
+        # ---- inner level: per-group average + block momentum (every K) --
+        grouped = jax.tree.map(
+            lambda x: x.reshape((G, S) + x.shape[1:]), learners
+        )
+
+        def inner(lrn_g, gp_g, res_g):
+            avg, res, m = self.inner_reducer.reduce(
+                lrn_g, gp_g, res_g, step=step
+            )
+            # bytes are python floats (static); lift so vmap can broadcast
+            return avg, res, {k: jnp.asarray(mv, jnp.float32)
+                              for k, mv in m.items()}
+
+        avg_g, inner_res, im = jax.vmap(inner)(
+            grouped, gparams, topo["inner_residual"]
+        )
+        avg_g = tree_cast(avg_g, cfg.meta_dtype)
+        inner_disp = tree_norm(tree_sub(avg_g, gparams))
+        gparams, gmom = block_momentum_update(
+            gparams, gmom, avg_g, mu=self.mu_in, eta=cfg.meta_lr,
+            nesterov=cfg.nesterov, use_pallas=cfg.use_pallas,
+        )
+
+        # ---- outer level: cross-group average + block momentum (every H) —
+        # under lax.cond so the quantize/top-k/momentum work runs only on
+        # the 1-in-H steps where it fires, not computed-and-discarded
+        do_outer = ((step + 1) % self.H) == 0
+        gparams_inner = gparams
+
+        def _outer_fire(_):
+            A, ores, om = self.outer_reducer.reduce(
+                gparams_inner, gp, topo["outer_residual"], step=step
+            )
+            A = tree_cast(A, cfg.meta_dtype)
+            gp_out, v_out = block_momentum_update(
+                gp, v, A, mu=self.mu_out, eta=1.0, nesterov=False,
+                use_pallas=cfg.use_pallas,
+            )
+            gpar = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (G,) + x.shape), gp_out
+            )
+            # bytes are static python floats inside the trace; lift them so
+            # both branches return the same pytree
+            return gp_out, v_out, gpar, ores, jnp.float32(om["comm_bytes"])
+
+        def _outer_hold(_):
+            return gp, v, gparams_inner, topo["outer_residual"], jnp.float32(0)
+
+        gp_new, v_new, gparams, outer_res_new, outer_bytes = lax.cond(
+            do_outer, _outer_fire, _outer_hold, None
+        )
+
+        # ---- reset learners to their group's params ---------------------
+        learners = jax.tree.map(
+            lambda g: jnp.broadcast_to(
+                g[:, None], (G, S) + g.shape[1:]
+            ).reshape((G * S,) + g.shape[1:]).astype(ldt),
+            gparams,
+        )
+
+        topo = {
+            "group_params": gparams,
+            "group_momentum": gmom,
+            "inner_residual": inner_res,
+            "outer_residual": outer_res_new,
+        }
+        metrics = {
+            "v_norm": tree_norm(v_new),
+            "group_v_norm": tree_norm(gmom),
+            "displacement_norm": inner_disp,
+            "outer_fired": do_outer.astype(jnp.float32),
+            # per-edge-class modeled wire traffic (intra every step,
+            # inter only when the outer level fires)
+            "comm_bytes_intra": jnp.sum(im["comm_bytes"]),
+            "comm_bytes_inter": outer_bytes,
+            "comm_bytes": jnp.sum(im["comm_bytes"]) + outer_bytes,
+            "comm_bytes_dense": (
+                jnp.sum(im["comm_bytes_dense"]) + dense_bytes(gparams_inner)
+            ),
+        }
+        return gp_new, v_new, learners, comm_residual, topo, metrics

@@ -1,0 +1,294 @@
+"""repro.topology acceptance tests: equivalence invariants between
+topologies and the flat algorithms (the style of test_meta_properties),
+mixing-matrix algebra, the Pallas neighbor-mix kernel vs its jnp oracle,
+per-edge-class wire modeling, and checkpoint round-trips of the extended
+MetaState.
+
+Invariants:
+  T1  Hierarchical(groups=1, outer_every=1, mu_out=0) == flat mavg exactly.
+  T2  Gossip(complete graph) == kavg's all-reduce average.
+  T3  every mixing matrix is doubly stochastic; gossip mixing preserves
+      the learner mean exactly (to float tolerance).
+  T4  neighbor-mix Pallas kernel (interpret) == jnp oracle.
+  T5  hierarchical outer level fires only every H meta steps.
+  T6  extended MetaState (topo buffers) checkpoint round-trips and a
+      resumed run stays bit-identical.
+  T7  modeled inter-node bytes: hierarchical with int8_topk cross-group
+      <= 1/4 of flat dense at equal meta-iterations.
+"""
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_state, save_state
+from repro.configs.base import (
+    GOSSIP_GRAPHS,
+    CommConfig,
+    MAvgConfig,
+    TopologyConfig,
+)
+from repro.core.meta import init_state, make_meta_step
+from repro.kernels import ops, ref
+from repro.models.simple import mlp_init, mlp_loss
+from repro.topology import graph_degree, mixing_matrix
+from repro.utils import tree_mean_axis0, tree_norm, tree_sub
+
+D, C, H = 8, 4, 16
+PARAMS = mlp_init(jax.random.PRNGKey(0), D, H, C)
+RNG = np.random.RandomState(11)
+
+
+def _batches(seed, L, K, B=4):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (L, K, B, D))
+    y = jax.random.randint(ky, (L, K, B), 0, C)
+    return {"x": x, "y": y}
+
+
+def _run(cfg, n_steps=3, params=PARAMS):
+    state = init_state(params, cfg)
+    step = jax.jit(make_meta_step(mlp_loss, cfg))
+    for i in range(n_steps):
+        state, metrics = step(state, _batches(i, cfg.num_learners, cfg.k_steps))
+    return state, metrics
+
+
+def _close(a, b, tol=1e-5):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=tol,
+                                   atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# T1 / T2: equivalence invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mu", [0.0, 0.6])
+@pytest.mark.parametrize("eta", [1.0, 1.3])
+def test_t1_hierarchical_g1_is_flat_mavg(mu, eta):
+    base = dict(algorithm="mavg", num_learners=4, k_steps=2,
+                learner_lr=0.1, momentum=mu, meta_lr=eta)
+    s_flat, _ = _run(MAvgConfig(**base))
+    s_h, _ = _run(MAvgConfig(**base, topology=TopologyConfig(
+        kind="hierarchical", groups=1, outer_every=1, outer_momentum=0.0)))
+    _close(s_flat.global_params, s_h.global_params, tol=1e-6)
+    _close(s_flat.learners, s_h.learners, tol=1e-6)
+
+
+def test_t2_gossip_complete_is_kavg():
+    base = dict(algorithm="kavg", num_learners=4, k_steps=2, learner_lr=0.1)
+    s_kavg, _ = _run(MAvgConfig(**base))
+    s_g, _ = _run(MAvgConfig(**base, topology=TopologyConfig(
+        kind="gossip", graph="complete")))
+    _close(s_kavg.global_params, s_g.global_params)
+    # every learner's private params coincide with the global average
+    _close(s_g.topo["params"],
+           jax.tree.map(lambda g, x: jnp.broadcast_to(g[None], x.shape),
+                        s_g.global_params, s_g.topo["params"]))
+
+
+def test_gossip_complete_mu_matches_flat_mavg():
+    """With the complete graph the gossip recursion collapses to flat
+    M-AVG for any mu (all learners share one consensus trajectory)."""
+    base = dict(algorithm="mavg", num_learners=4, k_steps=2,
+                learner_lr=0.1, momentum=0.6)
+    s_flat, _ = _run(MAvgConfig(**base))
+    s_g, _ = _run(MAvgConfig(**base, topology=TopologyConfig(
+        kind="gossip", graph="complete")))
+    _close(s_flat.global_params, s_g.global_params)
+
+
+# ---------------------------------------------------------------------------
+# T3: mixing-matrix algebra
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("graph", GOSSIP_GRAPHS)
+@pytest.mark.parametrize("L", [1, 2, 3, 4, 7, 8, 16])
+def test_t3_doubly_stochastic(graph, L):
+    W = mixing_matrix(graph, L)
+    np.testing.assert_allclose(W.sum(axis=0), 1.0, rtol=1e-6)
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, rtol=1e-6)
+    assert (W >= 0).all()
+    np.testing.assert_allclose(W, W.T, rtol=1e-6)  # symmetric circulant
+    assert graph_degree(graph, L) == int((W[0] > 0).sum()) - 1  # minus self
+
+
+@pytest.mark.parametrize("graph", GOSSIP_GRAPHS)
+def test_t3_mixing_preserves_learner_mean(graph):
+    L = 8
+    W = jnp.asarray(mixing_matrix(graph, L))
+    x = {"a": jnp.asarray(RNG.randn(L, 5, 7), jnp.float32),
+         "b": jnp.asarray(RNG.randn(L, 33), jnp.float32)}
+    mixed = ops.neighbor_mix_tree(x, W, use_pallas=False)
+    _close(tree_mean_axis0(mixed), tree_mean_axis0(x), tol=1e-5)
+    # and through a whole gossip meta step: global_params == learner mean
+    cfg = MAvgConfig(algorithm="mavg", num_learners=4, k_steps=2,
+                     momentum=0.5,
+                     topology=TopologyConfig(kind="gossip", graph=graph))
+    s, _ = _run(cfg)
+    _close(s.global_params, tree_mean_axis0(s.topo["params"]), tol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# T4: Pallas kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("L,rows", [(2, 8), (4, 64), (8, 256), (3, 16)])
+def test_t4_neighbor_mix_kernel_matches_ref(L, rows):
+    from repro.kernels import neighbor_mix as nm
+
+    x = jnp.asarray(RNG.randn(L, rows, 128), jnp.float32)
+    W = jnp.asarray(mixing_matrix("ring", L))
+    out_k = nm.neighbor_mix_3d(x, W, interpret=True)
+    out_r = ref.neighbor_mix_ref(x, W)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(1000,), (33, 7), (3,)])
+def test_t4_neighbor_mix_any_shape(shape):
+    L = 4
+    x = jnp.asarray(RNG.randn(L, *shape), jnp.float32)
+    W = jnp.asarray(mixing_matrix("exponential", L))
+    out = ops.neighbor_mix(x, W, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.neighbor_mix_ref(x, W)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_t4_pallas_gossip_step_matches_jnp():
+    base = dict(algorithm="mavg", num_learners=4, k_steps=2, momentum=0.6,
+                topology=TopologyConfig(kind="gossip", graph="ring",
+                                        momentum_tracking=True))
+    s_jnp, _ = _run(MAvgConfig(**base, use_pallas=False))
+    s_pl, _ = _run(MAvgConfig(**base, use_pallas=True))
+    _close(s_jnp.global_params, s_pl.global_params, tol=1e-4)
+    _close(s_jnp.topo, s_pl.topo, tol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# T5: outer cadence
+# ---------------------------------------------------------------------------
+
+
+def test_t5_outer_fires_every_h():
+    cfg = MAvgConfig(algorithm="mavg", num_learners=4, k_steps=2,
+                     momentum=0.5,
+                     topology=TopologyConfig(kind="hierarchical", groups=2,
+                                             outer_every=3))
+    state = init_state(PARAMS, cfg)
+    step = jax.jit(make_meta_step(mlp_loss, cfg))
+    for i in range(6):
+        prev_gp = state.global_params
+        state, m = step(state, _batches(i, 4, 2))
+        moved = float(tree_norm(tree_sub(state.global_params, prev_gp)))
+        if (i + 1) % 3 == 0:
+            assert m["outer_fired"] == 1.0 and moved > 1e-7
+        else:
+            assert m["outer_fired"] == 0.0 and moved == 0.0
+
+
+# ---------------------------------------------------------------------------
+# T6: checkpoint round-trip of the extended state
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topo", [
+    TopologyConfig(kind="hierarchical", groups=2, outer_every=2,
+                   outer_momentum=0.3,
+                   outer_comm=CommConfig(scheme="int8_topk",
+                                         error_feedback=True)),
+    TopologyConfig(kind="gossip", graph="exponential", momentum_tracking=True,
+                   inner_comm=CommConfig(scheme="int8", error_feedback=True)),
+])
+def test_t6_topology_state_roundtrip(tmp_path, topo):
+    cfg = MAvgConfig(algorithm="mavg", num_learners=4, k_steps=2,
+                     momentum=0.6, topology=topo)
+    step = jax.jit(make_meta_step(mlp_loss, cfg))
+    state = init_state(PARAMS, cfg)
+    for i in range(3):
+        state, _ = step(state, _batches(i, 4, 2))
+    assert state.topo is not None
+    buf_norm = sum(float(jnp.sum(jnp.abs(x)))
+                   for x in jax.tree.leaves(state.topo))
+    assert buf_norm > 0  # the buffers actually accumulated something
+
+    path = save_state(str(tmp_path), state, 3)
+    restored = load_state(path, jax.eval_shape(lambda: state))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    live, resumed = state, restored
+    for i in range(3, 5):
+        live, _ = step(live, _batches(i, 4, 2))
+        resumed, _ = step(resumed, _batches(i, 4, 2))
+    for a, b in zip(jax.tree.leaves(live), jax.tree.leaves(resumed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# T7: per-edge-class wire model
+# ---------------------------------------------------------------------------
+
+
+def test_t7_hierarchical_inter_bytes_reduction():
+    from repro.roofline import meta_wire_bytes, topology_wire_bytes
+
+    n, L = 1_000_000, 8
+    flat = topology_wire_bytes(n, CommConfig(), None, num_learners=L)
+    hier = topology_wire_bytes(
+        n, CommConfig(),
+        TopologyConfig(kind="hierarchical", groups=2, outer_every=2,
+                       outer_comm=CommConfig(scheme="int8_topk",
+                                             error_feedback=True)),
+        num_learners=L,
+    )
+    assert flat["intra_bytes"] == 0.0
+    assert flat["inter_bytes"] >= 4.0 * hier["inter_bytes"], (flat, hier)
+    # flat split agrees with the legacy flat model
+    dense, wire = meta_wire_bytes(n, CommConfig(), num_learners=L)
+    assert flat["inter_bytes"] == wire == dense
+
+    # gossip: degree-scaled, no amortization
+    goss = topology_wire_bytes(
+        n, CommConfig(), TopologyConfig(kind="gossip", graph="ring"),
+        num_learners=L,
+    )
+    assert goss["inter_bytes"] == 2 * flat["inter_bytes"]  # ring degree 2
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+
+def test_topology_config_validation():
+    with pytest.raises(AssertionError):
+        TopologyConfig(kind="mesh")
+    with pytest.raises(AssertionError):
+        TopologyConfig(graph="torus")
+    with pytest.raises(ValueError):
+        MAvgConfig(num_learners=4,
+                   topology=TopologyConfig(kind="hierarchical", groups=3))
+    with pytest.raises(ValueError):
+        MAvgConfig(algorithm="eamsgd",
+                   topology=TopologyConfig(kind="gossip"))
+
+
+def test_momentum_tracking_changes_trajectory():
+    base = dict(algorithm="mavg", num_learners=4, k_steps=2, momentum=0.6)
+    s_plain, _ = _run(MAvgConfig(**base, topology=TopologyConfig(
+        kind="gossip", graph="ring")))
+    s_mt, _ = _run(MAvgConfig(**base, topology=TopologyConfig(
+        kind="gossip", graph="ring", momentum_tracking=True)))
+    diff = float(tree_norm(tree_sub(s_plain.global_params,
+                                    s_mt.global_params)))
+    assert diff > 1e-7
+    for leaf in jax.tree.leaves(s_mt.global_params):
+        assert jnp.isfinite(leaf).all()
