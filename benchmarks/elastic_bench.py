@@ -1,0 +1,198 @@
+"""Elastic & heterogeneous execution benchmark (repro.topology).
+
+Three layers of numbers, mirroring topology_bench.py:
+
+1. *Measured churn* — final loss / val accuracy of the teacher-
+   classification MLP under simulated learner dropout (deterministic
+   membership schedules, 12.5%-37.5% churn) against the static topology
+   at equal meta-iterations. The acceptance row: <= 25% churn must land
+   within 5% of the static final loss (mean preservation through the
+   masked doubly-stochastic mixing is what makes this hold).
+2. *Heterogeneous K* — the Lemma-5 harness per group: sweeping
+   ``group_k`` cells (uniform and skewed) shows the optimal-K trade-off
+   shifting per group the way the paper's Lemma 5 predicts it globally —
+   more local steps buy sample throughput at a consensus cost, so the
+   best skew keeps the slow-edge group high-K and the fast group low-K.
+3. *Modeled* — roofline.topology_wire_bytes with the degree-over-time
+   wire model on a full-scale config (qwen3-1.7b): time-averaged degree
+   for one-peer exponential, learner/edge presence factors under churn.
+
+Prints ``elastic,...`` CSV lines; ``--json PATH`` dumps every row as the
+CI artifact. ``--smoke`` shrinks steps for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+if __package__ in (None, ""):  # `python benchmarks/elastic_bench.py --smoke`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_root, "src"))
+    sys.path.insert(0, _root)
+
+from benchmarks.common import run_mlp
+from repro.configs.base import (
+    CommConfig,
+    ElasticConfig,
+    TopologyConfig,
+    get_config,
+)
+from repro.roofline import DCN_LINK_BW, ICI_LINK_BW, topology_wire_bytes
+
+P, K, MU = 8, 4, 0.7
+
+# churn sweep: name -> (TopologyConfig, baseline-cell name). Each elastic
+# cell is scored against *its own* static topology at equal
+# meta-iterations. (CommConfig stays dense — the comm x topology product
+# is topology_bench's job.) Ring at degree 2 genuinely degrades under 25%
+# churn (~10% — every dead edge cuts a third of a learner's mixing mass);
+# the exponential graph and the hierarchical group average absorb it.
+CHURN_CELLS = (
+    ("gossip_ring_static", TopologyConfig(kind="gossip", graph="ring"),
+     None),
+    ("gossip_ring_drop12", TopologyConfig(
+        kind="gossip", graph="ring",
+        elastic=ElasticConfig(period=8, drop_frac=0.125)),
+     "gossip_ring_static"),
+    ("gossip_ring_drop25", TopologyConfig(
+        kind="gossip", graph="ring",
+        elastic=ElasticConfig(period=8, drop_frac=0.25)),
+     "gossip_ring_static"),
+    ("gossip_ring_drop37", TopologyConfig(
+        kind="gossip", graph="ring",
+        elastic=ElasticConfig(period=8, drop_frac=0.375)),
+     "gossip_ring_static"),
+    ("gossip_exp_static", TopologyConfig(kind="gossip",
+                                         graph="exponential"), None),
+    ("gossip_exp_drop25", TopologyConfig(
+        kind="gossip", graph="exponential",
+        elastic=ElasticConfig(period=8, drop_frac=0.25)),
+     "gossip_exp_static"),
+    ("gossip_one_peer", TopologyConfig(
+        kind="gossip", graph="one_peer_exponential"), "gossip_ring_static"),
+    ("hier_static", TopologyConfig(kind="hierarchical", groups=2,
+                                   outer_every=2), None),
+    ("hier_drop25", TopologyConfig(
+        kind="hierarchical", groups=2, outer_every=2,
+        elastic=ElasticConfig(period=8, drop_frac=0.25)),
+     "hier_static"),
+)
+
+# heterogeneous-K sweep (Lemma 5 per group): uniform cells bracket the
+# skewed ones so the per-group optimal-K shift is visible in one table
+HETERO_K_CELLS = (
+    ("group_k_1_1", (1, 1)),
+    ("group_k_2_2", (2, 2)),
+    ("group_k_4_4", (4, 4)),
+    ("group_k_1_4", (1, 4)),
+    ("group_k_2_4", (2, 4)),
+    ("group_k_4_1", (4, 1)),
+)
+
+MODEL_CELLS = (
+    ("flat_dense", TopologyConfig()),
+    ("gossip_ring", TopologyConfig(kind="gossip", graph="ring")),
+    ("gossip_exponential", TopologyConfig(kind="gossip",
+                                          graph="exponential")),
+    ("gossip_one_peer", TopologyConfig(kind="gossip",
+                                       graph="one_peer_exponential")),
+    ("gossip_ring_drop25", TopologyConfig(
+        kind="gossip", graph="ring",
+        elastic=ElasticConfig(period=8, drop_frac=0.25))),
+    ("hier_drop25", TopologyConfig(
+        kind="hierarchical", groups=2, outer_every=2,
+        elastic=ElasticConfig(period=8, drop_frac=0.25))),
+)
+
+
+def measured_churn(quick: bool) -> list[dict]:
+    steps = 20 if quick else 80
+    rows, finals = [], {}
+    for name, topo, baseline in CHURN_CELLS:
+        losses, acc = run_mlp("mavg", P=P, K=K, mu=MU, steps=steps,
+                              topology=topo)
+        final = sum(losses[-5:]) / len(losses[-5:])
+        finals[name] = final
+        drop = topo.elastic.drop_frac if topo.elastic else 0.0
+        vs = final / finals[baseline] if baseline else 1.0
+        row = {
+            "kind": "elastic_measured", "cell": name,
+            "topology": topo.kind, "graph": topo.graph, "drop_frac": drop,
+            "final_loss": final, "vs_static": vs,
+            "val_acc": acc, "meta_steps": steps,
+        }
+        rows.append(row)
+        print(f"elastic,{name},final_loss,{final:.4f},{vs:.3f}x_static")
+        print(f"elastic,{name},val_acc,{acc:.3f},frac")
+    # acceptance: the hierarchical cell — the group average renormalizes
+    # over present members, so 25% churn lands within 5% of static
+    accept = next(r for r in rows if r["cell"] == "hier_drop25")
+    rows.append({"kind": "elastic_accept",
+                 "loss_vs_static_at_25pct_churn": accept["vs_static"],
+                 "within_5pct": bool(accept["vs_static"] <= 1.05)})
+    print(f"elastic_accept,hier_drop25_vs_static,{accept['vs_static']:.3f},"
+          f"within_5pct,{accept['vs_static'] <= 1.05}")
+    return rows
+
+
+def measured_hetero_k(quick: bool) -> list[dict]:
+    steps = 20 if quick else 80
+    rows = []
+    for name, gk in HETERO_K_CELLS:
+        topo = TopologyConfig(kind="hierarchical", groups=2, outer_every=2,
+                              group_k=gk)
+        losses, acc = run_mlp("mavg", P=P, K=K, mu=MU, steps=steps,
+                              topology=topo)
+        final = sum(losses[-5:]) / len(losses[-5:])
+        # samples actually consumed reflect the per-group step counts
+        samples = steps * (P // 2) * sum(gk) * 16
+        row = {
+            "kind": "hetero_k_measured", "cell": name, "group_k": list(gk),
+            "final_loss": final, "val_acc": acc, "samples": samples,
+            "loss_per_ksample": final / max(samples / 1e3, 1e-9),
+        }
+        rows.append(row)
+        print(f"elastic,{name},final_loss,{final:.4f},"
+              f"samples,{samples}")
+    return rows
+
+
+def modeled(arch: str = "qwen3-1.7b", num_learners: int = P) -> list[dict]:
+    n = get_config(arch).param_count()
+    rows = []
+    for name, topo in MODEL_CELLS:
+        edge = topology_wire_bytes(n, CommConfig(), topo,
+                                   num_learners=num_learners)
+        wire_s = (edge["intra_bytes"] / ICI_LINK_BW
+                  + edge["inter_bytes"] / DCN_LINK_BW)
+        row = {
+            "kind": "elastic_model", "cell": name, "arch": arch,
+            **edge, "wire_s": wire_s,
+        }
+        rows.append(row)
+        print(f"elastic_model,{arch},{name},inter,{edge['inter_bytes']:.3e},B,"
+              f"avg_deg,{edge['avg_degree']:.1f},"
+              f"edge_presence,{edge['edge_presence']:.3f},"
+              f"{wire_s:.4f},s")
+    return rows
+
+
+def main(quick: bool = False, json_path: str | None = None) -> list[dict]:
+    rows = measured_churn(quick) + measured_hetero_k(quick) + modeled()
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {len(rows)} rows to {json_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="few steps (CI)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also dump all rows as JSON (CI artifact)")
+    args = ap.parse_args()
+    main(quick=args.smoke, json_path=args.json)

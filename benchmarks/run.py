@@ -7,6 +7,7 @@
   K  kernel_bench.py    fused block-momentum + flash-attention kernels
   C  comm_bench.py      meta-communication compression (repro.comm)
   T  topology_bench.py  meta-mixing topologies x comm (repro.topology)
+  L  elastic_bench.py    elastic membership / hetero-K / time-varying gossip
   R  roofline_table.py  section Dry-run / Roofline aggregation
 
 Prints ``name,...`` CSV lines. ``--quick`` shrinks steps/seeds (default
@@ -25,7 +26,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", nargs="*", default=None,
-                    help="subset: convergence mu_p k baselines kernel comm topology roofline")
+                    help="subset: convergence mu_p k baselines kernel comm topology elastic roofline")
     args = ap.parse_args()
     quick = not args.full
 
@@ -37,6 +38,7 @@ def main() -> None:
         k_sweep,
         kernel_bench,
         mu_p_sweep,
+        elastic_bench,
         roofline_table,
         topology_bench,
     )
@@ -45,6 +47,7 @@ def main() -> None:
         "kernel": lambda: kernel_bench.main(quick=quick),
         "comm": lambda: comm_bench.main(quick=quick),
         "topology": lambda: topology_bench.main(quick=quick),
+        "elastic": lambda: elastic_bench.main(quick=quick),
         "convergence": lambda: convergence.main(quick=quick),
         "baselines": lambda: baselines.main(quick=quick),
         "k": lambda: k_sweep.main(quick=quick),

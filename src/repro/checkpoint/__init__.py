@@ -1,1 +1,1 @@
-from repro.checkpoint.npz import load_state, save_state
+from repro.checkpoint.npz import latest_checkpoint, load_state, save_state

@@ -56,7 +56,14 @@ def load_state(path: str, template):
             )
         seen.add(key)
         arr = jnp.asarray(data[key], dtype=leaf.dtype)
-        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        if arr.shape != leaf.shape:
+            raise ValueError(
+                f"checkpoint {path} entry {key!r} has shape {arr.shape} but "
+                f"the restore template expects {leaf.shape} — the run was "
+                f"saved under a different MAvgConfig (e.g. another learner "
+                f"count, or a different elastic membership schedule / "
+                f"TopologyConfig.elastic period)"
+            )
         leaves.append(arr)
     extra = sorted(set(data.files) - seen)
     if extra:

@@ -207,7 +207,11 @@ COMM_SCHEMES = ("dense", "int8", "fp8", "topk", "int8_topk")
 # meta-level mixing topologies (the repro.topology subsystem)
 TOPOLOGIES = ("flat", "hierarchical", "gossip")
 
-GOSSIP_GRAPHS = ("ring", "exponential", "complete")
+# one_peer_exponential is *time-varying*: step t uses only the +/-2^(t mod
+# ceil(log2 L)) offsets (a perfect XOR matching when L is a power of two),
+# matching the static exponential graph's consensus rate at degree <= 2
+# (Takezawa et al. 2022)
+GOSSIP_GRAPHS = ("ring", "exponential", "complete", "one_peer_exponential")
 
 
 @dataclass(frozen=True)
@@ -243,6 +247,33 @@ class CommConfig:
 
 
 @dataclass(frozen=True)
+class ElasticConfig:
+    """Deterministic learner dropout/join schedule (elastic execution).
+
+    Real elastic clusters race wall clocks; under SPMD the same quantity
+    — which learners participate in a given meta step — is simulated with
+    a deterministic, checkpointable schedule instead (the downpour move,
+    DESIGN.md §4/§8). The (period, L) 0/1 membership mask rides in
+    ``MetaState.topo["membership"]`` and indexes by ``step % period``.
+
+    period      schedule length T in meta steps (cycles)
+    drop_frac   target fraction of learners absent at each scheduled step
+                (0.0 = everyone always present — must reproduce the static
+                topology bit-for-bit, pinned in tests/test_elastic.py)
+    seed        PRNG stream the schedule is drawn from; every group keeps
+                at least one present learner regardless
+    """
+
+    period: int = 8
+    drop_frac: float = 0.25
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.period >= 1, self.period
+        assert 0.0 <= self.drop_frac < 1.0, self.drop_frac
+
+
+@dataclass(frozen=True)
 class TopologyConfig:
     """Who averages with whom, how often (the ``repro.topology`` subsystem).
 
@@ -265,6 +296,16 @@ class TopologyConfig:
                      (None -> MAvgConfig.comm)
     outer_comm       Reducer for the cross-group edge class — where the
                      inter-node byte savings land (None -> MAvgConfig.comm)
+    group_k          hierarchical: per-group local-step counts K_g (length
+                     G, each 1..k_steps). Groups behind slow inter-node
+                     links can run more local steps than fast intra-node
+                     groups; the extra steps of low-K_g groups are masked
+                     inside the static K-step scan so the SPMD program
+                     never changes shape. None -> every group runs k_steps.
+    elastic          deterministic learner dropout/join schedule
+                     (ElasticConfig); absent learners run zero local steps
+                     and are masked out of the mixing with the matrix
+                     renormalized to stay doubly stochastic. None -> off.
     """
 
     kind: str = "flat"
@@ -275,6 +316,8 @@ class TopologyConfig:
     momentum_tracking: bool = False
     inner_comm: Optional[CommConfig] = None
     outer_comm: Optional[CommConfig] = None
+    group_k: Optional[tuple] = None
+    elastic: Optional[ElasticConfig] = None
 
     def __post_init__(self):
         assert self.kind in TOPOLOGIES, (
@@ -284,6 +327,23 @@ class TopologyConfig:
             f"unknown gossip graph {self.graph!r}; choose from {GOSSIP_GRAPHS}"
         )
         assert self.groups >= 1 and self.outer_every >= 1
+        if self.group_k is not None:
+            # normalize to a hashable tuple (configs are frozen/hashable)
+            object.__setattr__(self, "group_k", tuple(int(k) for k in self.group_k))
+            assert self.kind == "hierarchical", (
+                f"group_k only applies to the hierarchical topology, "
+                f"not {self.kind!r}"
+            )
+            assert len(self.group_k) == self.groups, (
+                f"group_k has {len(self.group_k)} entries for "
+                f"groups={self.groups}"
+            )
+            assert all(k >= 1 for k in self.group_k), self.group_k
+        if self.elastic is not None:
+            assert self.kind in ("hierarchical", "gossip"), (
+                f"elastic membership masks the hierarchical/gossip mixing; "
+                f"topology {self.kind!r} has no mixing rows to mask"
+            )
 
 
 @dataclass(frozen=True)
@@ -330,6 +390,12 @@ class MAvgConfig:
             raise ValueError(
                 f"num_learners={self.num_learners} not divisible into "
                 f"groups={t.groups}"
+            )
+        if t.group_k is not None and max(t.group_k) > self.k_steps:
+            raise ValueError(
+                f"group_k={t.group_k} exceeds k_steps={self.k_steps} — the "
+                f"heterogeneous schedule masks steps *within* the static "
+                f"K-step scan, so every K_g must be <= k_steps"
             )
 
 

@@ -131,48 +131,84 @@ def init_state(params, cfg: MAvgConfig, reducer=None,
 
 
 def _local_phase(loss_fn: LossFn, learners, local_mom, batches, cfg: MAvgConfig,
-                 lr):
+                 lr, steps=None):
     """batches: pytree with leaves (L, K, B_local, ...).
+
+    ``steps``: optional (L,) int32 active-step counts (heterogeneous
+    per-group K_g / elastic membership — repro.topology): learner j
+    applies only the first steps[j] of the K scanned updates, the rest
+    are masked with ``where`` so the compiled SPMD program is identical
+    for every schedule (an absent learner runs 0 steps). Loss/grad-norm
+    means count active steps only. ``steps`` may be traced (membership
+    is step-indexed).
 
     Returns (new learners, new local momentum, mean loss, mean grad-norm).
     """
+
+    def sgd_update(w, mom, g):
+        # update math in f32, stored back in the learner dtype (bf16
+        # learner copies keep collectives/memory at half cost)
+        if cfg.local_momentum > 0.0:
+            mom = jax.tree.map(
+                lambda m, gi: (
+                    cfg.local_momentum * m.astype(jnp.float32)
+                    - lr * gi.astype(jnp.float32)
+                ).astype(m.dtype),
+                mom, g,
+            )
+            w = jax.tree.map(
+                lambda wi, m: (wi + m.astype(wi.dtype)), w, mom
+            )
+        else:
+            w = jax.tree.map(
+                lambda wi, gi: (
+                    wi.astype(jnp.float32) - lr * gi.astype(jnp.float32)
+                ).astype(wi.dtype),
+                w, g,
+            )
+        return w, mom
 
     def one_learner(w, mom, bks):
         def step(carry, b):
             w, mom = carry
             (loss, _aux), g = jax.value_and_grad(loss_fn, has_aux=True)(w, b)
             gnorm = tree_norm(g)
-            # update math in f32, stored back in the learner dtype (bf16
-            # learner copies keep collectives/memory at half cost)
-            if cfg.local_momentum > 0.0:
-                mom = jax.tree.map(
-                    lambda m, gi: (
-                        cfg.local_momentum * m.astype(jnp.float32)
-                        - lr * gi.astype(jnp.float32)
-                    ).astype(m.dtype),
-                    mom, g,
-                )
-                w = jax.tree.map(
-                    lambda wi, m: (wi + m.astype(wi.dtype)), w, mom
-                )
-            else:
-                w = jax.tree.map(
-                    lambda wi, gi: (
-                        wi.astype(jnp.float32) - lr * gi.astype(jnp.float32)
-                    ).astype(wi.dtype),
-                    w, g,
-                )
+            w, mom = sgd_update(w, mom, g)
             return (w, mom), (loss, gnorm)
 
         (w, mom), (losses, gnorms) = lax.scan(step, (w, mom), bks)
         return w, mom, losses.mean(), gnorms.mean()
 
-    if local_mom is None:
-        local_mom = tree_zeros_like(learners)
-        out = jax.vmap(one_learner)(learners, local_mom, batches)
-        return out[0], None, out[2].mean(), out[3].mean()
-    out = jax.vmap(one_learner)(learners, local_mom, batches)
-    return out[0], out[1], out[2].mean(), out[3].mean()
+    def one_learner_masked(w, mom, bks, s):
+        k = jax.tree.leaves(bks)[0].shape[0]
+
+        def step(carry, xs):
+            w, mom = carry
+            b, i = xs
+            (loss, _aux), g = jax.value_and_grad(loss_fn, has_aux=True)(w, b)
+            gnorm = tree_norm(g)
+            w_upd, mom_upd = sgd_update(w, mom, g)
+            keep = i < s
+            w = jax.tree.map(lambda n, o: jnp.where(keep, n, o), w_upd, w)
+            mom = jax.tree.map(lambda n, o: jnp.where(keep, n, o), mom_upd, mom)
+            return (w, mom), (loss, gnorm, keep.astype(jnp.float32))
+
+        (w, mom), (losses, gnorms, act) = lax.scan(
+            step, (w, mom), (bks, jnp.arange(k))
+        )
+        return w, mom, (losses * act).sum(), (gnorms * act).sum(), act.sum()
+
+    mom_in = tree_zeros_like(learners) if local_mom is None else local_mom
+    if steps is None:
+        w, mom, loss, gnorm = jax.vmap(one_learner)(learners, mom_in, batches)
+        loss, gnorm = loss.mean(), gnorm.mean()
+    else:
+        w, mom, lsum, gsum, asum = jax.vmap(one_learner_masked)(
+            learners, mom_in, batches, steps
+        )
+        denom = jnp.maximum(asum.sum(), 1.0)
+        loss, gnorm = lsum.sum() / denom, gsum.sum() / denom
+    return w, (mom if local_mom is not None else None), loss, gnorm
 
 
 # ---------------------------------------------------------------------------
@@ -193,8 +229,19 @@ def meta_step(state: MetaState, batches, *, loss_fn: LossFn, cfg: MAvgConfig,
     """
     lr = jnp.float32(cfg.learner_lr) if lr is None else lr
     algo = cfg.algorithm
+    if algo in AVERAGING_ALGOS and topology is None:
+        from repro.topology import make_topology
+
+        topology = make_topology(cfg, reducer)
+    # heterogeneous / elastic execution: the topology may mask trailing
+    # local steps per learner (per-group K_g, membership dropout)
+    steps = (
+        topology.local_steps(state.topo, state.step)
+        if algo in AVERAGING_ALGOS else None
+    )
     learners, local_mom, loss, gnorm = _local_phase(
-        loss_fn, state.learners, state.local_momentum, batches, cfg, lr
+        loss_fn, state.learners, state.local_momentum, batches, cfg, lr,
+        steps=steps,
     )
     gp, v = state.global_params, state.momentum
     comm_res = state.comm_residual
@@ -202,10 +249,6 @@ def meta_step(state: MetaState, batches, *, loss_fn: LossFn, cfg: MAvgConfig,
     metrics = {"loss": loss, "grad_norm": gnorm}
 
     if algo in AVERAGING_ALGOS:
-        if topology is None:
-            from repro.topology import make_topology
-
-            topology = make_topology(cfg, reducer)
         gp, v, learners, comm_res, topo, topo_metrics = topology.mix(
             learners, gp, v, comm_res, topo, step=state.step
         )

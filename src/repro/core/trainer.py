@@ -54,40 +54,61 @@ class Trainer:
         self.history: list[dict] = []
 
     def run(self, meta_steps: Optional[int] = None, log=print):
+        """Drive ``meta_steps`` jitted steps.
+
+        Metrics stay on-device until a ``log_every`` boundary (or the end
+        of the run): materializing ``float(v)`` per step blocks the host
+        on device completion and serializes dispatch, so the in-between
+        steps are enqueued back-to-back and only the boundary step pays
+        the sync. ``history`` still holds plain float dicts afterwards.
+        """
         n = meta_steps if meta_steps is not None else self.cfg.meta_steps
         t0 = time.time()
-        for i in range(n):
-            step = int(self.state.step)
-            rng = jax.random.fold_in(self.data_rng, step)
-            batches = self.batch_fn(rng, step)
-            lr = (
-                self.lr_schedule(step)
-                if self.lr_schedule
-                else jnp.float32(self.mcfg.learner_lr)
-            )
-            self.state, metrics = self._step(self.state, batches, lr)
-            metrics = {k: float(v) for k, v in metrics.items()}
-            metrics["meta_step"] = step
-            metrics["samples"] = (
-                (step + 1)
-                * self.mcfg.num_learners
-                * self.mcfg.k_steps
-                * self.cfg.batch_per_learner
-            )
-            self.history.append(metrics)
-            if log and (step % self.cfg.log_every == 0):
-                log(
-                    f"[{self.mcfg.algorithm}] meta_step={step} "
-                    f"loss={metrics['loss']:.4f} "
-                    f"gnorm={metrics.get('grad_norm', 0):.3f} "
-                    f"({time.time() - t0:.1f}s)"
+        start = int(self.state.step)  # the only pre-loop host sync
+        pending: list[tuple[int, dict]] = []
+
+        def flush():
+            for s, dev_metrics in pending:
+                metrics = {k: float(v) for k, v in dev_metrics.items()}
+                metrics["meta_step"] = s
+                metrics["samples"] = (
+                    (s + 1)
+                    * self.mcfg.num_learners
+                    * self.mcfg.k_steps
+                    * self.cfg.batch_per_learner
                 )
-            if (
-                self.cfg.checkpoint_dir
-                and self.cfg.checkpoint_every
-                and (step + 1) % self.cfg.checkpoint_every == 0
-            ):
-                save_state(self.cfg.checkpoint_dir, self.state, step + 1)
+                self.history.append(metrics)
+            pending.clear()
+
+        try:
+            for i in range(n):
+                step = start + i
+                rng = jax.random.fold_in(self.data_rng, step)
+                batches = self.batch_fn(rng, step)
+                lr = (
+                    self.lr_schedule(step)
+                    if self.lr_schedule
+                    else jnp.float32(self.mcfg.learner_lr)
+                )
+                self.state, metrics = self._step(self.state, batches, lr)
+                pending.append((step, metrics))
+                if log and (step % self.cfg.log_every == 0):
+                    flush()
+                    m = self.history[-1]
+                    log(
+                        f"[{self.mcfg.algorithm}] meta_step={step} "
+                        f"loss={m['loss']:.4f} "
+                        f"gnorm={m.get('grad_norm', 0):.3f} "
+                        f"({time.time() - t0:.1f}s)"
+                    )
+                if (
+                    self.cfg.checkpoint_dir
+                    and self.cfg.checkpoint_every
+                    and (step + 1) % self.cfg.checkpoint_every == 0
+                ):
+                    save_state(self.cfg.checkpoint_dir, self.state, step + 1)
+        finally:
+            flush()  # metrics of completed steps survive an interrupt
         return self.history
 
     def restore(self, path):

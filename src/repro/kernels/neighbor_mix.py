@@ -61,3 +61,30 @@ def neighbor_mix_3d(x, w, *, interpret: bool = False,
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         interpret=interpret,
     )(w.astype(jnp.float32), x)
+
+
+def mixing_matrix_at(w_or_stack, step):
+    """Select the meta step's mixing matrix.
+
+    ``w_or_stack`` is either a static (L, L) matrix (returned as-is) or a
+    precomputed (T_period, L, L) stack of the time-varying graphs
+    (one-peer exponential), indexed by ``step % T`` — one cheap dynamic
+    slice, the stack is tiny. ``step`` may be traced; the T=1 case folds
+    to the constant.
+    """
+    if w_or_stack.ndim == 2:
+        return w_or_stack
+    T = w_or_stack.shape[0]
+    if T == 1:
+        return w_or_stack[0]
+    return jax.lax.dynamic_index_in_dim(
+        w_or_stack, step % T, axis=0, keepdims=False
+    )
+
+
+def neighbor_mix_3d_stepped(x, w_stack, step, *, interpret: bool = False,
+                            block: int | None = None):
+    """Time-varying variant: select W_t = w_stack[step % T] out of the
+    precomputed (T, L, L) stack, then run the fused mix."""
+    return neighbor_mix_3d(x, mixing_matrix_at(w_stack, step),
+                           interpret=interpret, block=block)

@@ -85,10 +85,28 @@ def block_momentum_tree(gp, v, avg, *, mu, eta=1.0, nesterov=False,
 # ---------------------------------------------------------------------------
 
 
-def neighbor_mix(x, w, *, interpret=None):
-    """Mix one (L, ...) learner stack with the (L, L) matrix w in a single
-    HBM pass. Returns sum_k w_jk x_k, same shape/dtype as x."""
+# the single stack-selection implementation lives next to the kernel
+mixing_matrix_at = _nm.mixing_matrix_at
+
+
+def _resolve_matrix(w, step):
+    if w.ndim == 3:
+        if step is None:
+            raise ValueError(
+                "got a (T, L, L) mixing-matrix stack but no step= — the "
+                "time-varying graphs are step-indexed; pass the meta step "
+                "(silently using step 0 would freeze the graph)"
+            )
+        return mixing_matrix_at(w, step)
+    return w
+
+
+def neighbor_mix(x, w, *, interpret=None, step=None):
+    """Mix one (L, ...) learner stack with the (L, L) matrix w — or, for
+    the time-varying graphs, a (T, L, L) stack indexed by ``step`` — in a
+    single HBM pass. Returns sum_k w_jk x_k, same shape/dtype as x."""
     interpret = _default_interpret() if interpret is None else interpret
+    w = _resolve_matrix(w, step)
     L = x.shape[0]
     flat = x.astype(jnp.float32).reshape(L, -1)
     n = flat.shape[1]
@@ -99,8 +117,13 @@ def neighbor_mix(x, w, *, interpret=None):
     return mixed.reshape(L, -1)[:, :n].reshape(x.shape).astype(x.dtype)
 
 
-def neighbor_mix_tree(tree, w, *, use_pallas=True, interpret=None):
-    """Apply the gossip mix leaf-wise over a stacked (L, ...) pytree."""
+def neighbor_mix_tree(tree, w, *, use_pallas=True, interpret=None, step=None):
+    """Apply the gossip mix leaf-wise over a stacked (L, ...) pytree.
+
+    ``w`` may be a (T, L, L) stack (time-varying graph, requires
+    ``step``); the step's matrix is selected once here, not per leaf.
+    """
+    w = _resolve_matrix(w, step)
     if not use_pallas:
         return jax.tree.map(lambda x: _ref.neighbor_mix_ref(x, w), tree)
     return jax.tree.map(

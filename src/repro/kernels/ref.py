@@ -68,6 +68,13 @@ def neighbor_mix_ref(x, w):
     return mixed.reshape(x.shape).astype(x.dtype)
 
 
+def neighbor_mix_stepped_ref(x, w_stack, step):
+    """Oracle of neighbor_mix.neighbor_mix_3d_stepped: select the step's
+    matrix out of the (T, L, L) stack, then mix."""
+    T = w_stack.shape[0]
+    return neighbor_mix_ref(x, w_stack[step % T])
+
+
 def flash_attention_ref(q, k, v, *, causal=True, sliding_window=0,
                         prefix_global=0):
     """q: (B, S, H, D); k, v: (B, S, KV, D). Full-softmax oracle."""

@@ -25,6 +25,7 @@ from repro.configs.base import (
     GOSSIP_GRAPHS,
     TOPOLOGIES,
     CommConfig,
+    ElasticConfig,
     MAvgConfig,
     TopologyConfig,
     TrainConfig,
@@ -70,6 +71,16 @@ def main() -> None:
                     help="gossip: mixing graph")
     ap.add_argument("--outer-comm", default=None, choices=COMM_SCHEMES,
                     help="cross-group comm scheme (default: same as --comm)")
+    ap.add_argument("--group-k", default=None,
+                    help="hierarchical: comma-separated per-group local-step "
+                         "counts K_g (each <= --k), e.g. --group-k 2,4")
+    ap.add_argument("--elastic-period", type=int, default=0,
+                    help="elastic membership schedule length in meta steps "
+                         "(0 = everyone always present)")
+    ap.add_argument("--elastic-drop", type=float, default=0.25,
+                    help="fraction of learners absent per scheduled step")
+    ap.add_argument("--elastic-seed", type=int, default=0,
+                    help="seed of the deterministic membership schedule")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -85,6 +96,15 @@ def main() -> None:
                    error_feedback=not args.no_error_feedback)
         if args.outer_comm else None
     )
+    group_k = (
+        tuple(int(k) for k in args.group_k.split(","))
+        if args.group_k else None
+    )
+    elastic = (
+        ElasticConfig(period=args.elastic_period, drop_frac=args.elastic_drop,
+                      seed=args.elastic_seed)
+        if args.elastic_period > 0 else None
+    )
     mcfg = MAvgConfig(
         algorithm=args.algorithm, num_learners=args.learners, k_steps=args.k,
         learner_lr=args.lr, momentum=args.momentum,
@@ -94,6 +114,7 @@ def main() -> None:
             kind=args.topology, groups=args.groups,
             outer_every=args.outer_every, outer_momentum=args.outer_momentum,
             graph=args.gossip_graph, outer_comm=outer_comm,
+            group_k=group_k, elastic=elastic,
         ),
     )
     tcfg = TrainConfig(

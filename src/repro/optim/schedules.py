@@ -17,10 +17,20 @@ def cosine(lr, total_steps, final_frac=0.1):
 
 
 def warmup_cosine(lr, warmup_steps, total_steps, final_frac=0.1):
-    cos = cosine(lr, total_steps, final_frac)
+    """Linear warmup to ``lr`` over ``warmup_steps``, then cosine decay
+    spanning the remaining ``total_steps - warmup_steps``.
+
+    The cosine phase is re-based at the warmup end so the schedule is
+    continuous at ``step == warmup_steps`` (decaying over ``total_steps``
+    from step 0 dropped the lr abruptly at the boundary — a ~2% cliff at
+    warmup=100/total=1000 that grows with the warmup fraction).
+    """
+    cos = cosine(lr, max(1, total_steps - warmup_steps), final_frac)
 
     def f(step):
         warm = lr * (step + 1) / max(1, warmup_steps)
-        return jnp.where(step < warmup_steps, jnp.float32(warm), cos(step))
+        return jnp.where(
+            step < warmup_steps, jnp.float32(warm), cos(step - warmup_steps)
+        )
 
     return f

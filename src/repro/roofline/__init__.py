@@ -6,6 +6,7 @@ from repro.roofline.terms import (
     PEAK_FLOPS_BF16,
     RooflineTerms,
     compute_terms,
+    elastic_presence,
     meta_wire_bytes,
     model_flops,
     participant_wire_bytes,

@@ -96,45 +96,88 @@ def meta_wire_bytes(n_params: int, comm: Optional[CommConfig], *,
     return dense, wire
 
 
+def elastic_presence(topology, num_learners: int) -> tuple[float, float]:
+    """(learner_frac, edge_frac) expected under the membership schedule.
+
+    ``learner_frac`` is the mean fraction of learners present per meta
+    step; ``edge_frac`` the mean fraction of *graph edges* with both
+    endpoints present — for gossip the two differ (an edge dies when
+    either endpoint is absent), and for time-varying graphs the live-edge
+    count is averaged over the combined schedule x graph period. Both are
+    1.0 when elasticity is off.
+    """
+    import math
+
+    if topology is None or getattr(topology, "elastic", None) is None:
+        return 1.0, 1.0
+    from repro.topology import membership_schedule, mixing_matrix_stack
+
+    import numpy as np
+
+    groups = topology.groups if topology.kind == "hierarchical" else 1
+    sched = membership_schedule(num_learners, topology.elastic, groups=groups)
+    learner_frac = float(sched.mean())
+    if topology.kind != "gossip":
+        return learner_frac, learner_frac
+    stack = mixing_matrix_stack(topology.graph, num_learners)
+    T_g, T_s = stack.shape[0], sched.shape[0]
+    eye = np.eye(num_learners, dtype=bool)
+    tot = live = 0.0
+    for t in range(math.lcm(T_g, T_s)):
+        adj = (stack[t % T_g] > 0) & ~eye
+        m = sched[t % T_s]
+        tot += adj.sum()
+        live += (adj & (m[:, None] > 0) & (m[None, :] > 0)).sum()
+    return learner_frac, float(live / max(tot, 1.0))
+
+
 def topology_wire_bytes(n_params: int, comm: Optional[CommConfig],
                         topology, *, num_learners: int,
                         learner_bytes: int = 4) -> dict:
     """Per-edge-class wire model of one meta iteration (amortized).
 
-    Returns {"intra_bytes", "inter_bytes", "total_bytes"} — bytes crossing
-    the fast intra-node links vs the slow inter-node links per meta step,
-    under the given ``TopologyConfig`` (None -> flat):
+    Returns {"intra_bytes", "inter_bytes", "total_bytes"} plus the
+    degree-over-time inputs ("avg_degree", "learner_presence",
+    "edge_presence") — bytes crossing the fast intra-node links vs the
+    slow inter-node links per meta step, under the given
+    ``TopologyConfig`` (None -> flat):
 
     flat          every learner's displacement feeds a global all-reduce —
                   all of it is modeled as inter-node (the paper's worst
                   case, what K amortizes)
-    hierarchical  L intra-group payloads (inner_comm) every step; G
+    hierarchical  L intra-group payloads (inner_comm) every step, scaled
+                  by the membership presence fraction under elasticity; G
                   cross-group payloads (outer_comm) every outer_every
                   steps, amortized
-    gossip        every learner ships to each of its degree(graph)
-                  neighbors every step — inter-node, no amortization
+    gossip        every learner ships to each of its live graph edges
+                  every step — inter-node, no amortization; the degree is
+                  averaged over the graph period (one-peer exponential)
+                  and edges die when either endpoint is absent
     """
     L = num_learners
     per = lambda c: participant_wire_bytes(n_params, c,
                                            learner_bytes=learner_bytes)
+    avg_deg = 0.0
+    learner_frac, edge_frac = elastic_presence(topology, L)
     if topology is None or topology.kind == "flat":
         inter = L * per(comm)
         intra = 0.0
     elif topology.kind == "hierarchical":
-        intra = L * per(topology.inner_comm or comm)
+        intra = L * per(topology.inner_comm or comm) * learner_frac
         inter = (topology.groups * per(topology.outer_comm or comm)
                  / topology.outer_every)
     elif topology.kind == "gossip":
-        from repro.topology import graph_degree
+        from repro.topology import avg_graph_degree
 
+        avg_deg = avg_graph_degree(topology.graph, L)
         intra = 0.0
-        inter = L * graph_degree(topology.graph, L) * per(
-            topology.inner_comm or comm
-        )
+        inter = L * avg_deg * per(topology.inner_comm or comm) * edge_frac
     else:
         raise ValueError(f"unknown topology {topology.kind!r}")
     return {"intra_bytes": float(intra), "inter_bytes": float(inter),
-            "total_bytes": float(intra + inter)}
+            "total_bytes": float(intra + inter),
+            "avg_degree": float(avg_deg),
+            "learner_presence": learner_frac, "edge_presence": edge_frac}
 
 
 def model_flops(cfg: ModelConfig, shape: InputShape, k_steps: int = 1) -> float:

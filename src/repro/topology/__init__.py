@@ -7,11 +7,20 @@ from repro.topology.base import (
     block_momentum_update,
     effective_momentum,
 )
+from repro.topology.elastic import (
+    mask_mixing_matrix,
+    membership_at,
+    membership_schedule,
+    present_edge_count,
+)
 from repro.topology.gossip import (
     Gossip,
+    avg_graph_degree,
     compress_stack,
     graph_degree,
     mixing_matrix,
+    mixing_matrix_stack,
+    mixing_period,
 )
 from repro.topology.hierarchical import Hierarchical
 
@@ -38,10 +47,17 @@ __all__ = [
     "Gossip",
     "Hierarchical",
     "Topology",
+    "avg_graph_degree",
     "block_momentum_update",
     "compress_stack",
     "effective_momentum",
     "graph_degree",
     "make_topology",
+    "mask_mixing_matrix",
+    "membership_at",
+    "membership_schedule",
     "mixing_matrix",
+    "mixing_matrix_stack",
+    "mixing_period",
+    "present_edge_count",
 ]

@@ -81,6 +81,18 @@ class Topology:
         """(comm_residual, topo) buffers for MetaState (None = unused)."""
         return None, None
 
+    def local_steps(self, topo, step):
+        """(L,) int32 active local-step counts for this meta step, or None
+        when every learner runs the full cfg.k_steps.
+
+        Heterogeneous execution hooks in here: per-group K_g (hierarchical
+        ``group_k``) and elastic membership (absent learners run zero
+        steps) both reduce to masking trailing iterations of the static
+        K-step scan in ``core.meta._local_phase`` — the SPMD program never
+        changes shape. ``step`` may be traced (membership is step-indexed).
+        """
+        return None
+
     def mix(self, learners, gp, v, comm_residual, topo, *, step):
         raise NotImplementedError
 

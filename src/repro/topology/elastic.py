@@ -1,0 +1,108 @@
+"""Elastic learner membership: deterministic dropout/join schedules and
+the masked, renormalized mixing algebra (DESIGN.md §8).
+
+Real elastic clusters decide membership by wall-clock racing (a straggler
+misses the sync window, a preempted VM rejoins later). Under SPMD that is
+unexpressible — every program step is collective — so membership becomes
+the same kind of controlled knob downpour staleness already is (§4): a
+deterministic (period, L) 0/1 schedule, drawn once from a seed, carried
+in ``MetaState.topo["membership"]`` so a resumed run replays the exact
+same churn.
+
+An absent learner at meta step n:
+  * runs zero local steps (its slots in the static K-step scan are
+    masked — the SPMD program never changes shape),
+  * ships nothing and receives nothing (its row/column of the mixing
+    matrix is masked), and
+  * keeps its params / momentum / error-feedback residual frozen.
+
+``mask_mixing_matrix`` keeps the masked W doubly stochastic: for a
+*symmetric* W, zeroing the edges to absent learners and returning the
+lost row mass to the diagonal preserves both row and column sums over
+the present subset (the column sum over present rows inherits the row
+identity by symmetry), while absent rows become identity rows. Hence the
+all-learner mean is exactly preserved through churn: present learners
+mix doubly-stochastically among themselves, absent learners are frozen.
+With an all-present mask the arithmetic is the identity on W bit-for-bit
+(`x * 1.0` and `x + 0.0` are exact), which is what makes the
+``drop_frac=0`` ≡ static-topology invariant of tests/test_elastic.py a
+bitwise statement rather than an allclose one.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.configs.base import ElasticConfig
+
+
+def membership_schedule(L: int, elastic: ElasticConfig, *,
+                        groups: int = 1) -> np.ndarray:
+    """(period, L) f32 0/1 mask, deterministic in ``elastic.seed``.
+
+    Per scheduled step, ``round(drop_frac * L)`` learners are absent,
+    chosen by seeded permutation subject to every group keeping at least
+    one present member (a fully-absent group has no average to take).
+    """
+    assert L >= 1 and L % groups == 0, (L, groups)
+    S = L // groups
+    rng = np.random.RandomState(elastic.seed)
+    n_drop = min(int(round(elastic.drop_frac * L)), L - 1)
+    sched = np.ones((elastic.period, L), np.float32)
+    for t in range(elastic.period):
+        dropped_per_group = [0] * groups
+        dropped = []
+        for j in rng.permutation(L):
+            if len(dropped) == n_drop:
+                break
+            g = int(j) // S
+            if dropped_per_group[g] < S - 1:  # keep >= 1 present per group
+                dropped.append(int(j))
+                dropped_per_group[g] += 1
+        sched[t, dropped] = 0.0
+    return sched
+
+
+def membership_at(membership, step):
+    """Step-indexed (L,) mask out of the (T, L) schedule (traced-step ok)."""
+    T = membership.shape[0]
+    return jnp.take(membership, step % T, axis=0)
+
+
+def mask_mixing_matrix(W, m):
+    """Mask a symmetric doubly-stochastic W by the (L,) 0/1 mask ``m``.
+
+    Present rows keep their present-neighbor weights and absorb the mass
+    of masked edges onto the diagonal; absent rows become identity rows
+    (frozen learners). Returns a W' that is doubly stochastic restricted
+    to the present subset, and bitwise equal to W when m is all ones.
+    """
+    L = W.shape[0]
+    eye = jnp.eye(L, dtype=W.dtype)
+    offdiag = W * (1.0 - eye)
+    masked_off = offdiag * (m[:, None] * m[None, :])
+    # mass of the edges this row lost to absent neighbors -> diagonal
+    diag_present = jnp.diagonal(W) + (offdiag * (1.0 - m)[None, :]).sum(axis=1)
+    diag = m * diag_present + (1.0 - m)
+    return masked_off + eye * diag[:, None]
+
+
+def present_edge_count(W, m):
+    """Directed present-to-present edges of W (self loops excluded) — the
+    step's wire multiplier under churn (degree-over-time accounting)."""
+    L = W.shape[0]
+    adj = (W > 0).astype(jnp.float32) * (1.0 - jnp.eye(L, dtype=jnp.float32))
+    return jnp.sum(adj * (m[:, None] * m[None, :]))
+
+
+def tree_where_mask(m, new, old):
+    """Leafwise ``where`` with the (L,) mask broadcast over trailing dims:
+    present learners take ``new``, absent keep ``old``."""
+    import jax
+
+    def sel(n, o):
+        mm = m.reshape((m.shape[0],) + (1,) * (n.ndim - 1))
+        return jnp.where(mm != 0, n, o)
+
+    return jax.tree.map(sel, new, old)

@@ -10,9 +10,14 @@ momentum survives — and helps — under such sparse mixing; the optional
 buffers with the same W.
 
 State (MetaState.topo):
-    params    x_j (L, ...) f32 — per-learner meta params
-    momentum  v_j (L, ...) f32 — per-learner block momentum
-    residual  per-learner error-feedback residual or None
+    params      x_j (L, ...) f32 — per-learner meta params
+    momentum    v_j (L, ...) f32 — per-learner block momentum
+    residual    per-learner error-feedback residual or None
+    membership  (period, L) 0/1 elastic schedule (only when
+                TopologyConfig.elastic is on — see topology/elastic.py:
+                absent learners run 0 local steps, their mixing rows are
+                masked with the matrix renormalized to stay doubly
+                stochastic, and their state is frozen)
 
 Per meta step (after the K local steps produce w_j from x_j):
     delta_j = w_j - x_j            (+ EF residual)
@@ -47,6 +52,13 @@ from repro.topology.base import (
     effective_momentum,
     learner_dtype,
 )
+from repro.topology.elastic import (
+    mask_mixing_matrix,
+    membership_at,
+    membership_schedule,
+    present_edge_count,
+    tree_where_mask,
+)
 from repro.utils import (
     tree_add,
     tree_cast,
@@ -58,11 +70,20 @@ from repro.utils import (
 
 
 # ---------------------------------------------------------------------------
-# mixing matrices (all symmetric circulant -> doubly stochastic)
+# mixing matrices (all symmetric -> doubly stochastic; one_peer_exponential
+# is time-varying with period ceil(log2 L))
 # ---------------------------------------------------------------------------
 
 
-def _neighbor_offsets(graph: str, L: int) -> set[int]:
+def mixing_period(graph: str, L: int) -> int:
+    """Number of distinct step-indexed matrices before the graph repeats
+    (1 for the static graphs)."""
+    if graph != "one_peer_exponential" or L <= 2:
+        return 1
+    return max(1, int(np.ceil(np.log2(L))))
+
+
+def _neighbor_offsets(graph: str, L: int, step: int = 0) -> set[int]:
     if L <= 1:
         return set()
     if graph == "complete":
@@ -77,18 +98,32 @@ def _neighbor_offsets(graph: str, L: int) -> set[int]:
             offs.add((L - p) % L)
             p *= 2
         return offs - {0}
+    if graph == "one_peer_exponential":
+        # step t keeps only the +/- 2^(t mod period) offsets of the
+        # exponential graph (Takezawa et al. 2022: alternating one-peer
+        # matrices reach the static graph's consensus rate at degree <= 2)
+        o = 1 << (step % mixing_period(graph, L))
+        return {o % L, (L - o) % L} - {0}
     raise ValueError(f"unknown gossip graph {graph!r}")
 
 
-def graph_degree(graph: str, L: int) -> int:
-    """Out-degree (neighbors excluding self) — the wire-bytes multiplier."""
-    return len(_neighbor_offsets(graph, L))
-
-
-def mixing_matrix(graph: str, L: int) -> np.ndarray:
+def mixing_matrix(graph: str, L: int, step: int = 0) -> np.ndarray:
     """(L, L) symmetric doubly-stochastic W with uniform edge weights
-    1/(deg+1) over self + graph neighbors."""
-    offs = _neighbor_offsets(graph, L)
+    1/(deg+1) over self + graph neighbors, at meta step ``step`` (the
+    static graphs ignore it).
+
+    ``one_peer_exponential`` with L a power of two uses the XOR perfect
+    matching j <-> j ^ 2^(step mod period): exactly one peer per learner
+    per step, weight 1/2 — the degree-1 regime of the paper.
+    """
+    if graph == "one_peer_exponential" and L > 1 and (L & (L - 1)) == 0:
+        o = 1 << (step % mixing_period(graph, L))
+        W = np.zeros((L, L), np.float32)
+        for j in range(L):
+            W[j, j] += 0.5
+            W[j, j ^ o] += 0.5
+        return W
+    offs = _neighbor_offsets(graph, L, step)
     w = 1.0 / (len(offs) + 1)
     W = np.zeros((L, L), np.float32)
     for j in range(L):
@@ -96,6 +131,29 @@ def mixing_matrix(graph: str, L: int) -> np.ndarray:
         for o in offs:
             W[j, (j + o) % L] += w
     return W
+
+
+def mixing_matrix_stack(graph: str, L: int) -> np.ndarray:
+    """(period, L, L) stack of the step-indexed matrices — precomputed
+    once and threaded through the fused neighbor-mix kernel, which
+    selects W_t = stack[step % period] per meta step."""
+    return np.stack(
+        [mixing_matrix(graph, L, t) for t in range(mixing_period(graph, L))]
+    )
+
+
+def graph_degree(graph: str, L: int, step: int = 0) -> int:
+    """Out-degree (neighbors excluding self) at ``step`` — the wire-bytes
+    multiplier. Derived from the actual matrix so the XOR-matching and
+    circulant variants can't drift from the model."""
+    return int((mixing_matrix(graph, L, step)[0] > 0).sum()) - 1
+
+
+def avg_graph_degree(graph: str, L: int) -> float:
+    """Mean out-degree over one period — the degree-over-time wire model
+    for the time-varying graphs (equals graph_degree for static ones)."""
+    T = mixing_period(graph, L)
+    return sum(graph_degree(graph, L, t) for t in range(T)) / T
 
 
 # ---------------------------------------------------------------------------
@@ -136,12 +194,16 @@ class Gossip(Topology):
         self.mu = effective_momentum(cfg)
         self.graph = t.graph
         self.momentum_tracking = t.momentum_tracking
+        self.elastic = t.elastic
         self.reducer = (
             reducer if reducer is not None
             else make_reducer_for(t.inner_comm or cfg.comm, cfg.meta_dtype)
         )
-        self.W = mixing_matrix(t.graph, cfg.num_learners)
+        self.period = mixing_period(t.graph, cfg.num_learners)
+        self.W_stack = mixing_matrix_stack(t.graph, cfg.num_learners)
+        self.W = self.W_stack[0]  # step-0 matrix (static graphs: the matrix)
         self.degree = graph_degree(t.graph, cfg.num_learners)
+        self.avg_degree = avg_graph_degree(t.graph, cfg.num_learners)
 
     # ------------------------------------------------------------------
     def init_buffers(self, gp, cfg: MAvgConfig):
@@ -155,20 +217,38 @@ class Gossip(Topology):
             "momentum": tree_zeros_like(params),
             "residual": self.reducer.init_residual(gp, L),
         }
+        if self.elastic is not None:
+            topo["membership"] = jnp.asarray(
+                membership_schedule(L, self.elastic)
+            )
         return None, topo
 
     # ------------------------------------------------------------------
-    def _mix_tree(self, tree):
+    def local_steps(self, topo, step):
+        if self.elastic is None:
+            return None
+        m = membership_at(topo["membership"], step)
+        return (jnp.int32(self.cfg.k_steps) * m).astype(jnp.int32)
+
+    # ------------------------------------------------------------------
+    def _mix_tree(self, tree, W):
         from repro.kernels import ops as kops
 
-        return kops.neighbor_mix_tree(
-            tree, jnp.asarray(self.W), use_pallas=self.cfg.use_pallas
-        )
+        return kops.neighbor_mix_tree(tree, W, use_pallas=self.cfg.use_pallas)
 
     def mix(self, learners, gp, v, comm_residual, topo, *, step):
         cfg = self.cfg
+        L = cfg.num_learners
         ldt = learner_dtype(learners)
         xp = topo["params"]  # (L, ...) f32
+
+        from repro.kernels import ops as kops
+
+        W = kops.mixing_matrix_at(jnp.asarray(self.W_stack), step)
+        mask = None
+        if self.elastic is not None:
+            mask = membership_at(topo["membership"], step)
+            W = mask_mixing_matrix(W, mask)
 
         delta = jax.tree.map(
             lambda w, x: w.astype(jnp.float32) - x.astype(jnp.float32),
@@ -179,7 +259,7 @@ class Gossip(Topology):
             learners=learners,
         )
         x_hat = tree_add(tree_cast(xp, jnp.float32), c)
-        mixed = tree_cast(self._mix_tree(x_hat), cfg.meta_dtype)
+        mixed = tree_cast(self._mix_tree(x_hat, W), cfg.meta_dtype)
 
         vL = topo["momentum"]
         xp_new, vL = block_momentum_update(
@@ -189,7 +269,16 @@ class Gossip(Topology):
         if self.momentum_tracking:
             # momentum-tracking correction: mix the momentum buffers with
             # the same W so the momentum consensus follows the param one
-            vL = self._mix_tree(vL)
+            vL = self._mix_tree(vL, W)
+        if mask is not None:
+            # absent learners are frozen in place: params, momentum and
+            # EF residual all keep their pre-step values (their masked W
+            # row is the identity, but the momentum recursion would still
+            # decay v and the EF algebra would still consume the residual)
+            xp_new = tree_where_mask(mask, xp_new, xp)
+            vL = tree_where_mask(mask, vL, topo["momentum"])
+            if residual is not None:
+                residual = tree_where_mask(mask, residual, topo["residual"])
 
         learners = tree_cast(xp_new, ldt)
         gp_new = tree_cast(tree_mean_axis0(xp_new), cfg.meta_dtype)
@@ -200,14 +289,24 @@ class Gossip(Topology):
                 lambda m, x: jnp.broadcast_to(m[None], x.shape), gp_new, xp_new
             ))
         )
+        membership = topo.get("membership")
         topo = {"params": xp_new, "momentum": vL, "residual": residual}
+        if membership is not None:
+            topo["membership"] = membership  # the schedule rides unchanged
+        # every learner ships its (compressed) displacement along each of
+        # its live graph edges this step — all inter-node. The edge count
+        # is taken from the step's actual matrix (time-varying graphs) and
+        # mask (elastic membership): the degree-over-time wire model.
+        edges = present_edge_count(
+            W, jnp.ones((L,), jnp.float32) if mask is None else mask
+        )
         metrics = {
             "v_norm": tree_norm(vL),
             "displacement_norm": tree_norm(tree_sub(mixed, xp)),
             "consensus_dist": consensus,
-            # every learner ships its (compressed) displacement to each of
-            # its `degree` neighbors, every meta step — all inter-node
-            "comm_bytes": wire * self.degree,
-            "comm_bytes_dense": db * self.degree,
+            "comm_bytes": (wire / L) * edges,
+            "comm_bytes_dense": (db / L) * edges,
         }
+        if mask is not None:
+            metrics["present_count"] = jnp.sum(mask)
         return gp_new, v, learners, comm_residual, topo, metrics

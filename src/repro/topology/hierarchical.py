@@ -15,6 +15,14 @@ State (MetaState.topo):
     group_momentum  v_g  (G, ...) f32 — inner block momentum
     inner_residual  per-group error-feedback stacks (G, S, ...) or None
     outer_residual  cross-group EF residual (G, ...) or None
+    membership      (period, L) 0/1 elastic schedule (only when
+                    TopologyConfig.elastic is on): absent learners run 0
+                    local steps and the group average renormalizes over
+                    the present count (topology/elastic.py, DESIGN.md §8)
+
+Heterogeneous K (TopologyConfig.group_k): group g applies only the first
+K_g of the K scanned local updates — masked inside the static scan via
+``local_steps``, so uniform group_k reproduces scalar K bit-for-bit.
 
 The outer update applies the displacement A - w~ with unit step
 (eta_out = 1), so outer_every=1 + outer_momentum=0 is an exact
@@ -22,6 +30,8 @@ pass-through of the inner level: Hierarchical(groups=1) reproduces flat
 mavg bit-for-bit at any meta_lr (pinned in tests/test_topology.py).
 """
 from __future__ import annotations
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +45,12 @@ from repro.topology.base import (
     effective_momentum,
     learner_dtype,
 )
+from repro.topology.elastic import (
+    membership_at,
+    membership_schedule,
+    tree_where_mask,
+)
+from repro.topology.gossip import compress_stack
 from repro.utils import tree_cast, tree_norm, tree_sub, tree_zeros_like
 
 
@@ -50,6 +66,16 @@ class Hierarchical(Topology):
         self.H = t.outer_every
         self.mu_in = effective_momentum(cfg)
         self.mu_out = t.outer_momentum
+        self.group_k = t.group_k
+        self.elastic = t.elastic
+        # per-learner base local-step counts: group g runs K_g of the K
+        # scanned steps (heterogeneous K — groups behind slow inter-node
+        # edges can afford more local steps than intra-node ones)
+        self._base_steps = (
+            np.repeat(np.asarray(t.group_k, np.int32), self.S)
+            if t.group_k is not None
+            else np.full((cfg.num_learners,), cfg.k_steps, np.int32)
+        )
         self.inner_reducer = (
             reducer if reducer is not None
             else make_reducer_for(t.inner_comm or cfg.comm, cfg.meta_dtype)
@@ -76,7 +102,21 @@ class Hierarchical(Topology):
             "inner_residual": inner_res,
             "outer_residual": self.outer_reducer.init_residual(gp, G),
         }
+        if self.elastic is not None:
+            topo["membership"] = jnp.asarray(
+                membership_schedule(cfg.num_learners, self.elastic, groups=G)
+            )
         return None, topo
+
+    # ------------------------------------------------------------------
+    def local_steps(self, topo, step):
+        if self.group_k is None and self.elastic is None:
+            return None
+        base = jnp.asarray(self._base_steps)
+        if self.elastic is None:
+            return base
+        m = membership_at(topo["membership"], step)
+        return base * m.astype(jnp.int32)
 
     # ------------------------------------------------------------------
     def mix(self, learners, gp, v, comm_residual, topo, *, step):
@@ -91,23 +131,86 @@ class Hierarchical(Topology):
             lambda x: x.reshape((G, S) + x.shape[1:]), learners
         )
 
-        def inner(lrn_g, gp_g, res_g):
-            avg, res, m = self.inner_reducer.reduce(
-                lrn_g, gp_g, res_g, step=step
-            )
-            # bytes are python floats (static); lift so vmap can broadcast
-            return avg, res, {k: jnp.asarray(mv, jnp.float32)
-                              for k, mv in m.items()}
+        if self.elastic is None:
+            def inner(lrn_g, gp_g, res_g):
+                avg, res, m = self.inner_reducer.reduce(
+                    lrn_g, gp_g, res_g, step=step
+                )
+                # bytes are python floats (static); lift so vmap broadcasts
+                return avg, res, {k: jnp.asarray(mv, jnp.float32)
+                                  for k, mv in m.items()}
 
-        avg_g, inner_res, im = jax.vmap(inner)(
-            grouped, gparams, topo["inner_residual"]
-        )
+            avg_g, inner_res, im = jax.vmap(inner)(
+                grouped, gparams, topo["inner_residual"]
+            )
+            intra_bytes = jnp.sum(im["comm_bytes"])
+            intra_dense = jnp.sum(im["comm_bytes_dense"])
+        else:
+            # membership-masked inner average: present learners only.
+            # Absent learners ran 0 local steps, so their displacement is
+            # exactly 0 and ships nothing; the group mean renormalizes
+            # over the present count, and absent EF residuals are frozen
+            # (an absent learner can't flush its pending error either).
+            from repro.comm import DenseReducer
+
+            mask = membership_at(topo["membership"], step).reshape(G, S)
+            delta = jax.tree.map(
+                lambda w, g: (w.astype(jnp.float32)
+                              - g.astype(jnp.float32)[:, None]),
+                grouped, gparams,
+            )
+
+            def masked_mean(tree, m_g, n_present):
+                return jax.tree.map(
+                    lambda x: jnp.sum(
+                        x.astype(jnp.float32)
+                        * m_g.reshape((S,) + (1,) * (x.ndim - 1)), axis=0
+                    ) / jnp.maximum(n_present, 1.0),
+                    tree,
+                )
+
+            def inner_masked(lrn_g, delta_g, gp_g, res_g, m_g):
+                n_present = jnp.sum(m_g)
+                if isinstance(self.inner_reducer, DenseReducer):
+                    # mirror DenseReducer.reduce's mean-of-weights algebra
+                    # (not gp + mean(delta)) so the all-present mask is
+                    # bit-for-bit the static path
+                    avg = masked_mean(lrn_g, m_g, n_present)
+                    return avg, res_g, jnp.float32(dense_bytes(lrn_g)), n_present
+                c, res, wire = compress_stack(
+                    self.inner_reducer, delta_g, res_g, step=step,
+                    learners=lrn_g,
+                )
+                avg = jax.tree.map(
+                    lambda g, a: g.astype(jnp.float32) + a,
+                    gp_g, masked_mean(c, m_g, n_present),
+                )
+                return avg, res, jnp.float32(wire), n_present
+
+            avg_g, inner_res, wire_g, present_g = jax.vmap(inner_masked)(
+                grouped, delta, gparams, topo["inner_residual"], mask
+            )
+            if inner_res is not None:
+                inner_res = jax.vmap(tree_where_mask)(
+                    mask, inner_res, topo["inner_residual"]
+                )
+            # wire scales with who actually showed up this step
+            intra_bytes = jnp.sum(wire_g * present_g) / S
+            intra_dense = (dense_bytes(learners) / G) * jnp.sum(present_g) / S
+
         avg_g = tree_cast(avg_g, cfg.meta_dtype)
         inner_disp = tree_norm(tree_sub(avg_g, gparams))
-        gparams, gmom = block_momentum_update(
+        gparams_upd, gmom_upd = block_momentum_update(
             gparams, gmom, avg_g, mu=self.mu_in, eta=cfg.meta_lr,
             nesterov=cfg.nesterov, use_pallas=cfg.use_pallas,
         )
+        if self.elastic is not None:
+            # a group with zero present members takes no inner update
+            gmask = (present_g > 0).astype(jnp.float32)
+            gparams = tree_where_mask(gmask, gparams_upd, gparams)
+            gmom = tree_where_mask(gmask, gmom_upd, gmom)
+        else:
+            gparams, gmom = gparams_upd, gmom_upd
 
         # ---- outer level: cross-group average + block momentum (every H) —
         # under lax.cond so the quantize/top-k/momentum work runs only on
@@ -128,14 +231,20 @@ class Hierarchical(Topology):
                 lambda x: jnp.broadcast_to(x[None], (G,) + x.shape), gp_out
             )
             # bytes are static python floats inside the trace; lift them so
-            # both branches return the same pytree
-            return gp_out, v_out, gpar, ores, jnp.float32(om["comm_bytes"])
+            # both branches return the same pytree. The dense yardstick is
+            # gated on do_outer exactly like the wire bytes: on hold steps
+            # the dense scheme wouldn't cross the inter-node links either,
+            # so charging it every step inflated compression ratios.
+            return (gp_out, v_out, gpar, ores,
+                    jnp.float32(om["comm_bytes"]),
+                    jnp.float32(dense_bytes(gparams_inner)))
 
         def _outer_hold(_):
-            return gp, v, gparams_inner, topo["outer_residual"], jnp.float32(0)
+            return (gp, v, gparams_inner, topo["outer_residual"],
+                    jnp.float32(0), jnp.float32(0))
 
-        gp_new, v_new, gparams, outer_res_new, outer_bytes = lax.cond(
-            do_outer, _outer_fire, _outer_hold, None
+        gp_new, v_new, gparams, outer_res_new, outer_bytes, outer_dense = (
+            lax.cond(do_outer, _outer_fire, _outer_hold, None)
         )
 
         # ---- reset learners to their group's params ---------------------
@@ -146,12 +255,15 @@ class Hierarchical(Topology):
             gparams,
         )
 
+        membership = topo.get("membership")
         topo = {
             "group_params": gparams,
             "group_momentum": gmom,
             "inner_residual": inner_res,
             "outer_residual": outer_res_new,
         }
+        if membership is not None:
+            topo["membership"] = membership  # the schedule rides unchanged
         metrics = {
             "v_norm": tree_norm(v_new),
             "group_v_norm": tree_norm(gmom),
@@ -159,11 +271,11 @@ class Hierarchical(Topology):
             "outer_fired": do_outer.astype(jnp.float32),
             # per-edge-class modeled wire traffic (intra every step,
             # inter only when the outer level fires)
-            "comm_bytes_intra": jnp.sum(im["comm_bytes"]),
+            "comm_bytes_intra": intra_bytes,
             "comm_bytes_inter": outer_bytes,
-            "comm_bytes": jnp.sum(im["comm_bytes"]) + outer_bytes,
-            "comm_bytes_dense": (
-                jnp.sum(im["comm_bytes_dense"]) + dense_bytes(gparams_inner)
-            ),
+            "comm_bytes": intra_bytes + outer_bytes,
+            "comm_bytes_dense": intra_dense + outer_dense,
         }
+        if self.elastic is not None:
+            metrics["present_count"] = jnp.sum(present_g)
         return gp_new, v_new, learners, comm_residual, topo, metrics

@@ -9,6 +9,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow  # full-arch sweep, ~70s
+
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import MAvgConfig
 from repro.core import init_state, make_meta_step

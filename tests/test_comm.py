@@ -56,6 +56,7 @@ def test_quant_dequant_error_bound(shape, dtype):
     assert float(jnp.max(jnp.abs(dq - x))) <= bound * 1.0001
 
 
+@pytest.mark.slow  # 4096-sample dither sweep, ~80s
 def test_stochastic_rounding_unbiased():
     """E[dequant(quant(x))] = x: the property EF + Theorem 1 rely on."""
     x = jnp.asarray(RNG.randn(8, 128) * 0.01, jnp.float32)

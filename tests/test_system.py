@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow  # end-to-end training + subprocess mesh, ~90s
+
 from repro.configs import get_config
 from repro.configs.base import MAvgConfig
 from repro.core.meta import init_state, make_meta_step
