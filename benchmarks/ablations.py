@@ -12,6 +12,7 @@ from __future__ import annotations
 from benchmarks.common import run_mlp, samples_to_target
 from repro.configs.base import MAvgConfig
 from repro.core.meta import init_state, make_meta_step
+from repro.pack import unpack_params
 from repro.data import classif_batch_fn, classif_eval_set
 from repro.models.simple import mlp_accuracy, mlp_init, mlp_loss
 
@@ -30,7 +31,7 @@ def run_cfg(tag, steps=60, **kw):
         b = bf(jax.random.fold_in(jax.random.PRNGKey(1), i), i)
         state, m = step(state, b)
         losses.append(float(m["loss"]))
-    acc = float(mlp_accuracy(state.global_params, classif_eval_set(32, 10)))
+    acc = float(mlp_accuracy(unpack_params(state), classif_eval_set(32, 10)))
     stt = samples_to_target(losses, 1.1, 4, 4, 8)
     print(f"ablations,{tag},final_loss={losses[-1]:.4f},val_acc={acc:.4f},"
           f"samples_to_1.1={stt}")

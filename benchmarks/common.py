@@ -10,6 +10,7 @@ from repro.configs.base import MAvgConfig
 from repro.core.meta import init_state, make_meta_step
 from repro.data import classif_batch_fn, classif_eval_set
 from repro.models.simple import mlp_accuracy, mlp_init, mlp_loss
+from repro.pack import unpack_params
 
 D_IN, CLASSES, HIDDEN = 32, 10, 64
 
@@ -43,7 +44,7 @@ def run_mlp(algorithm: str, *, P: int, K: int, mu: float, lr: float = 0.2,
         state, m = step(state, b)
         losses.append(float(m["loss"]))
     eval_set = classif_eval_set(D_IN, CLASSES)
-    acc = float(mlp_accuracy(state.global_params, eval_set))
+    acc = float(mlp_accuracy(unpack_params(state), eval_set))
     return losses, acc
 
 

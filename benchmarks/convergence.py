@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from benchmarks.common import run_mlp
 from repro.configs.base import MAvgConfig
 from repro.core.meta import init_state, make_meta_step
+from repro.pack import unpack_params
 from repro.data import classif_batch_fn, classif_eval_set, lm_batch_fn
 from repro.models import api as model_api
 from repro.configs import get_config
@@ -42,7 +43,7 @@ def run_cnn(algorithm, *, P=4, K=4, mu=0.7, lr=0.1, steps=40, batch=8,
         losses.append(float(m["loss"]))
     ev = classif_eval_set(hw * hw * 3, 10, n=512)
     ev = {"x": ev["x"].reshape(-1, hw, hw, 3), "y": ev["y"]}
-    return losses, float(cnn_accuracy(state.global_params, ev))
+    return losses, float(cnn_accuracy(unpack_params(state), ev))
 
 
 def run_tiny_transformer(algorithm, *, P=4, K=2, mu=0.6, lr=0.5, steps=20,

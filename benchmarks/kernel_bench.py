@@ -2,13 +2,29 @@
 
 CPU numbers are NOT TPU-representative (the Pallas kernels run in
 interpret mode here); what this bench proves is (a) functional parity at
-realistic sizes and (b) the op-count reduction of the fused update, which
-is the TPU win: 3 reads + 2 writes instead of 4 reads + 2 writes + extra
-kernel launches. The XLA-path timing comparison below times the jnp
-reference against the fused-jnp expression to show the fusion headroom
-XLA itself finds on CPU.
+realistic sizes, (b) the HBM-pass reduction of the fused updates (the TPU
+win: the block-momentum update is 3 reads + 2 writes instead of 4 reads +
+2 writes, and the packed compressed displacement is one pass instead of
+three), and (c) the meta-phase launch-count / padding-waste collapse of
+the packed flat meta-plane (repro.pack): O(1) whole-model kernel launches
+per op instead of one per pytree leaf. The XLA-path timing comparison
+below times the jnp reference against the fused-jnp expression to show
+the fusion headroom XLA itself finds on CPU.
+
+``--json PATH`` dumps the launch/padding/HBM rows as JSON (the CI
+artifact shape shared with comm/topology/elastic/pack benches).
 """
 from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+if __package__ in (None, ""):  # `python benchmarks/kernel_bench.py --quick`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_root, "src"))
+    sys.path.insert(0, _root)
 
 import jax
 import jax.numpy as jnp
@@ -16,8 +32,53 @@ import jax.numpy as jnp
 from benchmarks.common import timeit
 from repro.kernels import ops, ref
 
+# the real configs the packed meta-plane targets (layer-stacked param
+# trees: 11-31 leaves each; the leafiest and the padding-heaviest)
+LAUNCH_COUNT_ARCHS = ("llama3-405b", "qwen1.5-110b", "xlstm-350m",
+                      "hymba-1.5b")
+# per-leaf meta-phase kernel launches per op family (block momentum,
+# quantize, dequantize each launched once per leaf; packed launches once)
+META_OPS = ("block_momentum", "quantize", "dequantize")
 
-def main(quick: bool = False):
+
+def meta_plane_rows(quick: bool = False) -> list[dict]:
+    """Meta-phase launch count and padding waste: per-leaf vs packed.
+
+    Static analysis over the real configs' abstract param trees (no
+    device allocation — jax.eval_shape), so the full-scale numbers are
+    exact, not extrapolated from a toy model.
+    """
+    from repro.configs.base import get_config
+    from repro.launch.specs import abstract_params
+    from repro.pack import make_pack_spec
+
+    rows = []
+    del quick  # static analysis via eval_shape: free at any scale
+    for arch in LAUNCH_COUNT_ARCHS:
+        cfg = get_config(arch)
+        spec = make_pack_spec(abstract_params(cfg))
+        per_leaf_launches = spec.num_leaves  # per op, per meta step
+        rows.append({
+            "kind": "meta_plane", "arch": arch,
+            "n_leaves": spec.num_leaves,
+            "launches_per_op_per_leaf": per_leaf_launches,
+            "launches_per_op_packed": 1,
+            "launch_reduction": per_leaf_launches,
+            "pad_waste_elems_per_leaf": spec.per_leaf_pad_waste(),
+            "pad_waste_elems_packed": spec.pad_waste,
+            "params": sum(spec.sizes),
+            "packed_rows": spec.rows,
+        })
+        r = rows[-1]
+        print(f"kernel,meta_launches_per_op,{arch},"
+              f"{r['launches_per_op_per_leaf']}->1")
+        print(f"kernel,meta_pad_waste_elems,{arch},"
+              f"{r['pad_waste_elems_per_leaf']}->"
+              f"{r['pad_waste_elems_packed']}")
+    return rows
+
+
+def main(quick: bool = False, json_path: str | None = None):
     n = 1 << 20 if not quick else 1 << 16
     key = jax.random.PRNGKey(0)
     w, v, a = (jax.random.normal(jax.random.fold_in(key, i), (n,))
@@ -27,7 +88,6 @@ def main(quick: bool = False):
     @jax.jit
     def unfused(w, v, a):
         d = a - w
-        d = jax.block_until_ready(d) if False else d
         v2 = 0.9 * v
         v2 = v2 + d
         w2 = w + v2
@@ -42,11 +102,28 @@ def main(quick: bool = False):
     print(f"kernel,block_momentum_unfused_xla,{t_unfused:.1f},us")
     print(f"kernel,block_momentum_fused_xla,{t_fused:.1f},us")
 
-    # analytic HBM-pass count (the TPU roofline argument for the kernel)
-    bytes_naive = 4 * (3 * 4 * n) // 3  # 4 reads + 2 writes equivalent
+    # analytic HBM-pass count (the TPU roofline argument for the kernel):
+    # naive = 4 reads (w, v, a, and the materialized d) + 2 writes;
+    # fused = 3 reads (w, v, a) + 2 writes — all f32
+    bytes_naive = (4 + 2) * 4 * n
     bytes_fused = (3 + 2) * 4 * n
-    print(f"kernel,block_momentum_hbm_bytes_naive,{6 * 4 * n},bytes")
+    print(f"kernel,block_momentum_hbm_bytes_naive,{bytes_naive},bytes")
     print(f"kernel,block_momentum_hbm_bytes_fused,{bytes_fused},bytes")
+
+    # packed meta plane: launch count + padding waste (the repro.pack win)
+    rows = meta_plane_rows(quick=quick)
+    rows.append({
+        "kind": "hbm_passes", "op": "block_momentum",
+        "bytes_naive": bytes_naive, "bytes_fused": bytes_fused,
+        "passes_naive": 6, "passes_fused": 5,
+    })
+    rows.append({
+        # the fused packed displacement kernel (kernels/pack_update.py):
+        # naive = delta pass + EF-add pass + quantize pass over the plane
+        # (2 reads + 1 write each) vs one fused 4-read / 3-write pass
+        "kind": "hbm_passes", "op": "pack_update",
+        "passes_naive": 9, "passes_fused": 7,
+    })
 
     # flash attention: interpret-mode correctness timing at a macro size
     B, S, H, KV, D = (1, 512, 8, 2, 128) if not quick else (1, 128, 4, 2, 64)
@@ -63,6 +140,15 @@ def main(quick: bool = False):
     print(f"kernel,flash_attention_interpret_maxerr,{err:.2e},abs")
     assert err < 5e-3
 
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"kernel,json,{json_path},written")
+
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    main(quick=args.quick, json_path=args.json)

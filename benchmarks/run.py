@@ -8,6 +8,7 @@
   C  comm_bench.py      meta-communication compression (repro.comm)
   T  topology_bench.py  meta-mixing topologies x comm (repro.topology)
   L  elastic_bench.py    elastic membership / hetero-K / time-varying gossip
+  P  pack_bench.py      packed flat meta-plane parity / launches (repro.pack)
   R  roofline_table.py  section Dry-run / Roofline aggregation
 
 Prints ``name,...`` CSV lines. ``--quick`` shrinks steps/seeds (default
@@ -26,7 +27,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", nargs="*", default=None,
-                    help="subset: convergence mu_p k baselines kernel comm topology elastic roofline")
+                    help="subset: convergence mu_p k baselines kernel comm topology elastic pack roofline")
     args = ap.parse_args()
     quick = not args.full
 
@@ -39,6 +40,7 @@ def main() -> None:
         kernel_bench,
         mu_p_sweep,
         elastic_bench,
+        pack_bench,
         roofline_table,
         topology_bench,
     )
@@ -48,6 +50,7 @@ def main() -> None:
         "comm": lambda: comm_bench.main(quick=quick),
         "topology": lambda: topology_bench.main(quick=quick),
         "elastic": lambda: elastic_bench.main(quick=quick),
+        "pack": lambda: pack_bench.main(quick=quick),
         "convergence": lambda: convergence.main(quick=quick),
         "baselines": lambda: baselines.main(quick=quick),
         "k": lambda: k_sweep.main(quick=quick),

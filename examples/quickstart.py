@@ -12,6 +12,7 @@ from repro.configs.base import MAvgConfig
 from repro.core.meta import init_state, make_meta_step
 from repro.data import classif_batch_fn, classif_eval_set
 from repro.models.simple import mlp_accuracy, mlp_init, mlp_loss
+from repro.pack import unpack_params
 
 P, K, B, D, C = 4, 4, 16, 32, 10  # learners, local steps, batch, dims
 
@@ -33,7 +34,7 @@ def train(algorithm: str, momentum: float, steps: int = 60):
             samples = (i + 1) * P * K * B
             print(f"  {algorithm:5s} samples={samples:6d} "
                   f"loss={losses[-1]:.4f}")
-    acc = float(mlp_accuracy(state.global_params, classif_eval_set(D, C)))
+    acc = float(mlp_accuracy(unpack_params(state), classif_eval_set(D, C)))
     return losses, acc
 
 

@@ -20,6 +20,7 @@ from repro.core.trainer import Trainer
 from repro.data import lm_batch_fn, lm_eval_set
 from repro.models import api as model_api
 from repro.optim import warmup_cosine
+from repro.pack import unpack_params
 
 
 def make_config(width: str) -> ModelConfig:
@@ -78,7 +79,7 @@ def main():
     history = trainer.run()
     ev = lm_eval_set(cfg, n=32, seq_len=args.seq)
     loss, _ = jax.jit(lambda p, b: model_api.loss_fn(p, cfg, b))(
-        trainer.state.global_params, ev)
+        unpack_params(trainer.state), ev)
     print(f"\ndone: train loss {history[0]['loss']:.3f} -> "
           f"{history[-1]['loss']:.3f}; eval loss {float(loss):.3f}; "
           f"samples {history[-1]['samples']}")

@@ -1,1 +1,6 @@
-from repro.checkpoint.npz import latest_checkpoint, load_state, save_state
+from repro.checkpoint.npz import (
+    latest_checkpoint,
+    load_packspec,
+    load_state,
+    save_state,
+)

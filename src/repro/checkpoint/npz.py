@@ -8,21 +8,32 @@ resumed run is bit-identical (tested in tests/test_checkpoint.py and
 tests/test_topology.py). Keys are slash-joined tree paths; optional
 fields that are None contribute no leaves, so the layout only changes
 when a feature is on.
+
+Packed meta-plane states (``MetaState.spec`` set — repro.pack, DESIGN.md
+§9) save each plane as its single (rows, 128) / (lead, rows, 128) buffer
+under the plain field key, plus a ``__packspec__`` JSON sidecar entry
+recording the leaf layout (paths / shapes / dtypes / offsets), so a
+packed .npz is decodable without re-deriving the spec from code. Loading
+is layout-converting in the legacy direction: a per-leaf checkpoint
+restores into a packed template by packing each plane's leaves through
+the template's spec (same leading stack axes: L / G / tau), so pre-pack
+runs resume bit-identically on the packed path.
 """
 from __future__ import annotations
 
+import json
 import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+# the slash-joined key format is shared with PackSpec.paths — the legacy
+# per-leaf restore matches spec paths against npz keys, so both sides
+# must use the same helper
+from repro.pack import _path_key
 
-def _path_key(p):
-    for attr in ("key", "idx", "name"):
-        if hasattr(p, attr):
-            return str(getattr(p, attr))
-    return str(p)
+PACKSPEC_KEY = "__packspec__"
 
 
 def _flatten(tree):
@@ -35,27 +46,85 @@ def _flatten(tree):
 def save_state(directory: str, state, step: int) -> str:
     os.makedirs(directory, exist_ok=True)
     path = os.path.join(directory, f"step_{step:08d}.npz")
-    np.savez(path, **_flatten(state))
+    flat = _flatten(state)
+    spec = getattr(state, "spec", None)
+    if spec is not None:
+        flat[PACKSPEC_KEY] = np.asarray(json.dumps(spec.layout_dict()))
+    np.savez(path, **flat)
     return path
 
 
+def _is_packed_plane(spec, leaf) -> bool:
+    """Does this template leaf have the packed-buffer trailing shape?"""
+    return (leaf.ndim >= 2 and leaf.shape[-2] == spec.rows
+            and leaf.shape[-1] == 128)
+
+
+def _pack_legacy(spec, data, key: str, leaf):
+    """Assemble the packed plane ``key`` from a per-leaf checkpoint's
+    ``key/<leaf path>`` entries (or None if they aren't all present)."""
+    subkeys = [f"{key}/{p}" for p in spec.paths]
+    if not all(k in data for k in subkeys):
+        return None
+    buf = spec.pack_numpy([np.asarray(data[k]) for k in subkeys],
+                          dtype=leaf.dtype)
+    return buf, set(subkeys)
+
+
 def load_state(path: str, template):
-    """Restore into the structure of ``template`` (same treedef)."""
-    data = np.load(path)
+    """Restore into the structure of ``template`` (same treedef).
+
+    When ``template`` is a packed MetaState (``template.spec`` set) and
+    the checkpoint was saved by the legacy per-leaf path, each plane is
+    packed through the template's spec on load.
+    """
+    with np.load(path) as data:
+        return _load_state(path, data, template)
+
+
+def _load_state(path, data, template):
+    spec = getattr(template, "spec", None)
+    if PACKSPEC_KEY in data.files:
+        # a packed plane of the wrong leaf layout can still have the
+        # template's (rows, 128) shape (rows quantizes to 8x128 tiles),
+        # so shape checks alone would let renamed/reordered/resized
+        # leaves restore at wrong offsets — validate the saved layout
+        # against the template's spec explicitly
+        saved = json.loads(str(data[PACKSPEC_KEY][()]))
+        want = spec.layout_dict() if spec is not None else None
+        if saved != want:
+            raise ValueError(
+                f"checkpoint {path} was saved with a different packed "
+                f"meta-plane layout than the restore template expects "
+                f"(leaf paths/shapes/offsets differ — e.g. renamed or "
+                f"reordered model params, or a per-leaf template for a "
+                f"packed checkpoint); resume with the model/MAvgConfig "
+                f"the run was saved under"
+            )
     leaves_t, treedef = jax.tree_util.tree_flatten(template)
     paths = jax.tree_util.tree_flatten_with_path(template)[0]
     leaves = []
-    seen = set()
+    seen = {PACKSPEC_KEY} if PACKSPEC_KEY in data.files else set()
     for (p, leaf) in paths:
         key = "/".join(_path_key(q) for q in p)
-        if key not in data:
-            raise KeyError(
-                f"checkpoint {path} has no entry {key!r} — it was saved "
-                f"under a different MAvgConfig (comm / topology buffers "
-                f"only exist when the feature was on at save time)"
+        if key in data:
+            seen.add(key)
+            arr = jnp.asarray(data[key], dtype=leaf.dtype)
+        else:
+            packed = (
+                _pack_legacy(spec, data, key, leaf)
+                if spec is not None and _is_packed_plane(spec, leaf)
+                else None
             )
-        seen.add(key)
-        arr = jnp.asarray(data[key], dtype=leaf.dtype)
+            if packed is None:
+                raise KeyError(
+                    f"checkpoint {path} has no entry {key!r} — it was saved "
+                    f"under a different MAvgConfig (comm / topology buffers "
+                    f"only exist when the feature was on at save time)"
+                )
+            buf, consumed = packed
+            seen |= consumed
+            arr = jnp.asarray(buf, dtype=leaf.dtype)
         if arr.shape != leaf.shape:
             raise ValueError(
                 f"checkpoint {path} entry {key!r} has shape {arr.shape} but "
@@ -75,6 +144,16 @@ def load_state(path: str, template):
             f"resume with the MAvgConfig the run was saved under"
         )
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_packspec(path: str) -> dict | None:
+    """The ``__packspec__`` layout sidecar of a packed checkpoint (the
+    spec-keyed decode map for external tools), or None for per-leaf
+    checkpoints."""
+    with np.load(path) as data:
+        if PACKSPEC_KEY not in data.files:
+            return None
+        return json.loads(str(data[PACKSPEC_KEY][()]))
 
 
 def latest_checkpoint(directory: str):

@@ -7,6 +7,15 @@ kernels in kernels/quantize.py, or their jnp oracle). Wire accounting:
 1 byte per value (int8/fp8) + 4 bytes per chunk scale — vs. 4 bytes per
 value dense, i.e. ~3.9x before sparsification.
 
+On the packed flat meta-plane (repro.pack — the learner stack arrives as
+ONE (L, rows, 128) array) the int8/int4 reduce short-circuits into the
+fused pack_update kernel: displacement + EF-residual add + quantize in a
+single HBM pass instead of the generic path's three, with per-learner
+scale chunks (DESIGN.md §9). Wire bytes are modeled over the plane's
+element count here; core.meta.meta_step rescales every comm_bytes*
+metric by the real-parameter fraction so padding never counts as
+payload.
+
 The dither stream is keyed on (seed, leaf index, meta step) so every
 leaf/step draws independent uniforms while staying reproducible and
 jit-stable.
@@ -16,11 +25,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.comm.reducer import CompressedReducer
+from repro.comm.reducer import CompressedReducer, dense_bytes
 from repro.kernels import ops as kops
+from repro.utils import tree_norm
 
 VALUE_BYTES = {"int8": 1.0, "int4": 0.5, "fp8": 1.0}
 SCALE_BYTES = 4.0
+QMAX = {"int8": 127, "int4": 7}
 
 
 class QuantReducer(CompressedReducer):
@@ -38,7 +49,55 @@ class QuantReducer(CompressedReducer):
             jax.random.fold_in(jax.random.PRNGKey(self.seed), i), step
         )
 
+    def reduce(self, learners, gp, residual, *, step):
+        # packed meta-plane fast path: the whole learner stack is one
+        # (L, rows, 128) array — fuse delta/EF/quantize into one pass.
+        # The shape check (not just the type) keeps bare-array param
+        # pytrees on the generic per-leaf path.
+        if (isinstance(learners, jax.Array) and learners.ndim == 3
+                and learners.shape[-1] == 128 and self.dtype in QMAX):
+            return self._reduce_packed(learners, gp, residual, step)
+        return super().reduce(learners, gp, residual, step=step)
+
+    def _reduce_packed(self, learners, gp, residual, step):
+        L, rows, lanes = learners.shape
+        u = jax.random.uniform(
+            self._leaf_key(0, step), learners.shape, jnp.float32
+        )
+        c, err, scales = kops.pack_update(
+            learners, gp, residual, u, qmax=QMAX[self.dtype],
+            block=self.chunk_rows, use_pallas=self.use_pallas,
+        )
+        avg = gp.astype(jnp.float32) + jnp.mean(c, axis=0)
+        wire = (learners.size * VALUE_BYTES[self.dtype]
+                + scales.size * SCALE_BYTES)
+        db = dense_bytes(learners)
+        metrics = {
+            "comm_bytes": wire,
+            "comm_bytes_dense": db,
+            "comm_compression": db / wire,
+            "comm_error_norm": tree_norm(err),
+        }
+        return avg, (err if residual is not None else None), metrics
+
     def _compress(self, delta, step):
+        # packed (L, rows, 128) displacement plane: per-learner chunking
+        # through the same pack_update geometry/dither as _reduce_packed,
+        # so the compress-only routes (gossip, masked hierarchical inner)
+        # stay bitwise consistent with the fused reduce
+        if (isinstance(delta, jax.Array) and delta.ndim == 3
+                and delta.shape[-1] == 128 and self.dtype in QMAX):
+            u = jax.random.uniform(
+                self._leaf_key(0, step), delta.shape, jnp.float32
+            )
+            c, _err, scales = kops.pack_update(
+                delta, jnp.zeros(delta.shape[1:], delta.dtype), None, u,
+                qmax=QMAX[self.dtype], block=self.chunk_rows,
+                use_pallas=self.use_pallas,
+            )
+            wire = (delta.size * VALUE_BYTES[self.dtype]
+                    + scales.size * SCALE_BYTES)
+            return c, wire
         leaves, treedef = jax.tree_util.tree_flatten(delta)
         out, wire = [], 0.0
         for i, leaf in enumerate(leaves):

@@ -96,7 +96,8 @@ class CompressedReducer(Reducer):
         if residual is not None:
             delta = tree_add(delta, residual)
         c, wire = self._compress(delta, step)
-        new_residual = tree_sub(delta, c) if residual is not None else None
+        err = tree_sub(delta, c)  # quantization error: EF residual + metric
+        new_residual = err if residual is not None else None
         avg = jax.tree.map(
             lambda g, ci: (g.astype(jnp.float32) + jnp.mean(ci, axis=0)),
             gp, c,
@@ -106,7 +107,7 @@ class CompressedReducer(Reducer):
             "comm_bytes": wire,
             "comm_bytes_dense": db,
             "comm_compression": db / wire,
-            "comm_error_norm": tree_norm(tree_sub(delta, c)),
+            "comm_error_norm": tree_norm(err),
         }
         return avg, new_residual, metrics
 

@@ -11,6 +11,18 @@ int8_topk at k_frac=0.1 ships ~1/8 of dense.
 Masked-then-quantized values stay exactly zero through the stochastic
 rounding (floor(0/s + u) = 0 for u < 1), so the sparsity pattern survives
 the wire.
+
+On the packed flat meta-plane (repro.pack, DESIGN.md §9) the whole
+displacement arrives as one leaf, so selection becomes whole-model-vector
+top-k — the form the communication-efficient analyses state it in —
+rather than per-leaf budgets: a layer with uniformly small displacements
+may ship nothing while a hot layer ships more than k_frac of its own
+entries (error feedback returns the skipped mass either way). Padding
+slots are exact zeros and are never selected (the ``ab > 0`` guard), but
+they do inflate ``k = round(k_frac * n)`` by the pad fraction —
+negligible on the real configs, conservative (ships more) on tiny ones.
+Packed-vs-per-leaf top-k parity is pinned at the trajectory level in
+tests/test_pack.py and benchmarks/pack_bench.py.
 """
 from __future__ import annotations
 

@@ -367,6 +367,12 @@ class MAvgConfig:
     meta_dtype: str = "float32"
     compute_dtype: str = "float32"
     use_pallas: bool = False  # Pallas kernels on TPU; jnp ref elsewhere
+    # packed flat meta-plane (repro.pack, DESIGN.md §9): the whole param
+    # pytree rides as ONE lane-aligned (rows, 128) buffer, so every
+    # meta-phase op is a constant number of whole-model kernel passes
+    # instead of one per leaf. False = the legacy per-leaf path, kept as
+    # the parity oracle and for resuming per-leaf checkpoints.
+    packed: bool = True
     # meta-communication compression (repro.comm); dense = exact average
     comm: CommConfig = field(default_factory=CommConfig)
     # meta-level mixing topology (repro.topology); flat = all-reduce

@@ -28,10 +28,18 @@ int8 / fp8 / top-k, with optional error feedback whose residual rides in
 ``repro.topology`` subsystem (flat all-reduce / hierarchical two-level
 M-AVG / decentralized gossip — DESIGN.md §7), selected via
 ``MAvgConfig.topology``; its buffers ride in ``MetaState.topo``.
+
+Under ``MAvgConfig.packed`` (the default) the whole meta plane is the
+packed flat buffer of ``repro.pack`` (DESIGN.md §9): every state field is
+one lane-aligned (rows, 128) array (stacked (L, rows, 128) along the
+learner axis) and the model pytree exists only inside ``_local_phase``.
+Because a raw array is itself a pytree, all the meta algebra below runs
+unchanged on either representation — what changes is the cost: one
+whole-model kernel pass per op instead of one per leaf.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import partial
 from typing import Any, Callable, Optional
 
@@ -40,6 +48,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import AVERAGING_ALGOS, MAvgConfig
+from repro.pack import make_pack_spec
 from repro.utils import (
     tree_axpy,
     tree_broadcast_learners,
@@ -70,6 +79,14 @@ class MetaState:
     topo:          topology buffer pytree (repro.topology — group params /
                    momentum under hierarchical, per-learner params /
                    momentum under gossip), or None under flat
+    spec:          STATIC repro.pack.PackSpec of the packed flat
+                   meta-plane, or None on the legacy per-leaf path. When
+                   set, every plane above is a single lane-aligned
+                   (rows, 128) buffer (stacked (L, rows, 128) along the
+                   learner axis) instead of a parameter pytree; the model
+                   pytree exists only inside the local phase
+                   (DESIGN.md §9). Static: part of the pytree structure,
+                   not a leaf — jit caches on it and checkpoints skip it.
     """
 
     global_params: Any
@@ -80,6 +97,7 @@ class MetaState:
     step: jnp.ndarray
     comm_residual: Any = None
     topo: Any = None
+    spec: Any = field(default=None, metadata=dict(static=True))
 
 
 def init_state(params, cfg: MAvgConfig, reducer=None,
@@ -93,7 +111,18 @@ def init_state(params, cfg: MAvgConfig, reducer=None,
     meta_step/make_meta_step (if any) so the matching error-feedback /
     topology buffers are allocated; otherwise ``cfg.comm``/``cfg.topology``
     decide.
+
+    Under ``cfg.packed`` (the default) the param pytree is packed once
+    into the flat meta-plane here, and every state buffer below is a
+    single (rows, 128) / (L, rows, 128) array; the static PackSpec rides
+    in ``MetaState.spec`` so meta_step can unpack at the learner
+    boundary and eval code can recover the model pytree
+    (repro.pack.unpack_params).
     """
+    spec = None
+    if cfg.packed:
+        spec = make_pack_spec(params, dtype=cfg.meta_dtype)
+        params = spec.pack(params)
     gp = tree_cast(params, cfg.meta_dtype)
     learners = tree_broadcast_learners(
         tree_cast(gp, cfg.compute_dtype), cfg.num_learners
@@ -122,6 +151,7 @@ def init_state(params, cfg: MAvgConfig, reducer=None,
         step=jnp.zeros((), jnp.int32),
         comm_residual=comm_residual,
         topo=topo,
+        spec=spec,
     )
 
 
@@ -131,7 +161,7 @@ def init_state(params, cfg: MAvgConfig, reducer=None,
 
 
 def _local_phase(loss_fn: LossFn, learners, local_mom, batches, cfg: MAvgConfig,
-                 lr, steps=None):
+                 lr, steps=None, spec=None):
     """batches: pytree with leaves (L, K, B_local, ...).
 
     ``steps``: optional (L,) int32 active-step counts (heterogeneous
@@ -142,8 +172,22 @@ def _local_phase(loss_fn: LossFn, learners, local_mom, batches, cfg: MAvgConfig,
     means count active steps only. ``steps`` may be traced (membership
     is step-indexed).
 
+    ``spec``: the packed meta-plane layout (repro.pack). The local phase
+    is the ONLY place the model pytree exists under packing: each
+    learner's (rows, 128) buffer is unpacked to the param tree here
+    (loss_fn needs structure), the K-step scan runs on the tree exactly
+    as on the per-leaf path (bit-identical update math), and the result
+    is repacked once after the scan. Leaves stay in the learner plane's
+    compute dtype through the round trip.
+
     Returns (new learners, new local momentum, mean loss, mean grad-norm).
     """
+    if spec is not None:
+        ldt = _ldtype(learners)
+        unpack = lambda b: spec.unpack(b, dtype=b.dtype)
+        repack = lambda t: spec.pack(t, dtype=ldt)
+    else:
+        unpack = repack = lambda t: t
 
     def sgd_update(w, mom, g):
         # update math in f32, stored back in the learner dtype (bf16
@@ -176,8 +220,9 @@ def _local_phase(loss_fn: LossFn, learners, local_mom, batches, cfg: MAvgConfig,
             w, mom = sgd_update(w, mom, g)
             return (w, mom), (loss, gnorm)
 
+        w, mom = unpack(w), unpack(mom)
         (w, mom), (losses, gnorms) = lax.scan(step, (w, mom), bks)
-        return w, mom, losses.mean(), gnorms.mean()
+        return repack(w), repack(mom), losses.mean(), gnorms.mean()
 
     def one_learner_masked(w, mom, bks, s):
         k = jax.tree.leaves(bks)[0].shape[0]
@@ -193,10 +238,12 @@ def _local_phase(loss_fn: LossFn, learners, local_mom, batches, cfg: MAvgConfig,
             mom = jax.tree.map(lambda n, o: jnp.where(keep, n, o), mom_upd, mom)
             return (w, mom), (loss, gnorm, keep.astype(jnp.float32))
 
+        w, mom = unpack(w), unpack(mom)
         (w, mom), (losses, gnorms, act) = lax.scan(
             step, (w, mom), (bks, jnp.arange(k))
         )
-        return w, mom, (losses * act).sum(), (gnorms * act).sum(), act.sum()
+        return (repack(w), repack(mom),
+                (losses * act).sum(), (gnorms * act).sum(), act.sum())
 
     mom_in = tree_zeros_like(learners) if local_mom is None else local_mom
     if steps is None:
@@ -241,7 +288,7 @@ def meta_step(state: MetaState, batches, *, loss_fn: LossFn, cfg: MAvgConfig,
     )
     learners, local_mom, loss, gnorm = _local_phase(
         loss_fn, state.learners, state.local_momentum, batches, cfg, lr,
-        steps=steps,
+        steps=steps, spec=state.spec,
     )
     gp, v = state.global_params, state.momentum
     comm_res = state.comm_residual
@@ -253,6 +300,17 @@ def meta_step(state: MetaState, batches, *, loss_fn: LossFn, cfg: MAvgConfig,
             learners, gp, v, comm_res, topo, step=state.step
         )
         metrics.update(topo_metrics)
+        if state.spec is not None:
+            # reducers see the packed plane and model their value bytes
+            # over its element count, which includes alignment/tail
+            # padding; rescale all byte metrics to the real parameter
+            # count so packed and per-leaf runs report comparable wire
+            # payloads (scale/index bytes are approximated by the same
+            # factor — chunk geometry differs between layouts anyway)
+            f = sum(state.spec.sizes) / state.spec.total
+            for k in list(metrics):
+                if k.startswith("comm_bytes"):
+                    metrics[k] = metrics[k] * f
 
     elif algo == "eamsgd":
         # elastic force toward the center; center gets block momentum.
@@ -294,6 +352,7 @@ def meta_step(state: MetaState, batches, *, loss_fn: LossFn, cfg: MAvgConfig,
             global_params=gp, momentum=v, learners=learners,
             local_momentum=local_mom, stale_queue=queue,
             step=state.step + 1, comm_residual=comm_res, topo=topo,
+            spec=state.spec,
         )
         metrics["stale_norm"] = tree_norm(d_apply)
         return state, metrics
@@ -304,6 +363,7 @@ def meta_step(state: MetaState, batches, *, loss_fn: LossFn, cfg: MAvgConfig,
         global_params=gp, momentum=v, learners=learners,
         local_momentum=local_mom, stale_queue=state.stale_queue,
         step=state.step + 1, comm_residual=comm_res, topo=topo,
+        spec=state.spec,
     )
     return state, metrics
 

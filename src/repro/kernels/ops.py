@@ -16,6 +16,7 @@ from repro.kernels import block_momentum as _bm
 from repro.kernels import flash_attention as _fa
 from repro.kernels import local_sgd as _sgd
 from repro.kernels import neighbor_mix as _nm
+from repro.kernels import pack_update as _pu
 from repro.kernels import quantize as _q
 from repro.kernels import ref as _ref
 
@@ -31,13 +32,22 @@ def _default_interpret() -> bool:
 # ---------------------------------------------------------------------------
 
 
-def _to_2d(x):
-    n = x.size
+def _layout(n: int) -> tuple[int, int]:
+    """(rows, pad) of the (rows, 128) wire layout for an n-element leaf —
+    computed once per call site; same-shaped operands share it."""
     rows = -(-n // LANES)
     rows = -(-rows // 8) * 8  # sublane multiple
-    pad = rows * LANES - n
-    flat = jnp.pad(x.reshape(-1), (0, pad))
-    return flat.reshape(rows, LANES), x.shape, n
+    return rows, rows * LANES - n
+
+
+def _to_2d_as(x, rows: int, pad: int):
+    """Apply a precomputed layout to one operand."""
+    return jnp.pad(x.reshape(-1), (0, pad)).reshape(rows, LANES)
+
+
+def _to_2d(x):
+    rows, pad = _layout(x.size)
+    return _to_2d_as(x, rows, pad), x.shape, x.size
 
 
 def _from_2d(x2, shape, n):
@@ -52,13 +62,12 @@ def _from_2d(x2, shape, n):
 def block_momentum(w, v, a, *, mu, eta=1.0, nesterov=False, interpret=None):
     """Fused meta update on one array. Returns (w', v')."""
     interpret = _default_interpret() if interpret is None else interpret
-    w2, shape, n = _to_2d(w)
-    v2, _, _ = _to_2d(v)
-    a2, _, _ = _to_2d(a)
+    rows, pad = _layout(w.size)  # w/v/a are same-shaped: one layout
+    w2, v2, a2 = (_to_2d_as(t, rows, pad) for t in (w, v, a))
     w2n, v2n = _bm.block_momentum_2d(
         w2, v2, a2, mu, eta, nesterov=nesterov, interpret=interpret
     )
-    return _from_2d(w2n, shape, n), _from_2d(v2n, shape, n)
+    return _from_2d(w2n, w.shape, w.size), _from_2d(v2n, v.shape, v.size)
 
 
 def block_momentum_tree(gp, v, avg, *, mu, eta=1.0, nesterov=False,
@@ -138,10 +147,12 @@ def neighbor_mix_tree(tree, w, *, use_pallas=True, interpret=None, step=None):
 
 def sgd_apply(w, g, lr, *, interpret=None):
     interpret = _default_interpret() if interpret is None else interpret
-    w2, shape, n = _to_2d(w)
-    g2, _, _ = _to_2d(g)
-    out = _sgd.sgd_apply_2d(w2, g2, lr, interpret=interpret)
-    return _from_2d(out, shape, n)
+    rows, pad = _layout(w.size)  # w/g are same-shaped: one layout
+    out = _sgd.sgd_apply_2d(
+        _to_2d_as(w, rows, pad), _to_2d_as(g, rows, pad), lr,
+        interpret=interpret,
+    )
+    return _from_2d(out, w.shape, w.size)
 
 
 # ---------------------------------------------------------------------------
@@ -191,6 +202,31 @@ def quant_dequant(x, key, *, dtype="int8", block=None, use_pallas=True,
                               use_pallas=use_pallas, interpret=interpret)
     return dequantize(q, s, shape, n, use_pallas=use_pallas,
                       interpret=interpret), s.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# fused packed-plane compressed displacement (repro.pack meta step)
+# ---------------------------------------------------------------------------
+
+
+def pack_update(w, g, e, u, *, qmax=127, block=None, use_pallas=True,
+                interpret=None):
+    """Fused displacement + EF add + stochastic-rounding quantize over the
+    packed (L, rows, 128) learner plane against the (rows, 128) meta
+    params — one HBM pass instead of the per-leaf path's three
+    (kernels/pack_update.py; jnp oracle in ref.py shares the dither and
+    chunk geometry, so the two routes agree to one scale ulp with
+    bit-identical rounding decisions).
+
+    Returns (c, err, scales) — see pack_update_3d.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    L, rows, lanes = w.shape
+    b = _q.choose_block(rows, block)
+    if use_pallas:
+        return _pu.pack_update_3d(w, g, e, u, qmax=qmax, block=b,
+                                  interpret=interpret)
+    return _ref.pack_update_ref(w, g, e, u, qmax, b)
 
 
 # ---------------------------------------------------------------------------

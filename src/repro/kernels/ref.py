@@ -57,6 +57,28 @@ def fp8_roundtrip_ref(x, block: int):
     return x8.astype(jnp.float32) * s_full
 
 
+def pack_update_ref(w, g, e, u, qmax: int, block: int):
+    """Oracle of pack_update.pack_update_3d: fused displacement + EF add +
+    stochastic-rounding quantize over the packed (L, rows, 128) plane.
+
+    Same math and chunk geometry (per-learner ``block``-row scale chunks)
+    as the kernel, so with a shared ``u`` the rounding decisions are
+    bit-identical (outputs agree to one scale ulp).
+    Returns (c, err, scales) — see pack_update_3d.
+    """
+    L, rows, lanes = w.shape
+    d = w.astype(jnp.float32) - g.astype(jnp.float32)[None]
+    if e is not None:
+        d = d + e.astype(jnp.float32)
+    nchunks = rows // block
+    db = d.reshape(L, nchunks, block * lanes)
+    scales = jnp.maximum(jnp.abs(db).max(axis=2), 1e-12) / qmax  # (L, nchunks)
+    s_full = jnp.repeat(scales, block, axis=1).reshape(L, rows, 1)
+    q = jnp.clip(jnp.floor(d / s_full + u), -qmax, qmax)
+    c = q * s_full
+    return c, d - c, scales
+
+
 def neighbor_mix_ref(x, w):
     """Oracle of neighbor_mix.neighbor_mix_3d on an unflattened learner
     stack: x (L, ...), w (L, L) -> sum_k w_jk x_k, f32 math."""

@@ -109,6 +109,8 @@ def state_shardings(cfg: ModelConfig, mcfg: MAvgConfig, mesh, *,
     laxes = meshlib.learner_axes(mesh, hierarchical=hierarchical)
     fsdp = meshlib.fsdp_axes(mesh, hierarchical=hierarchical)
     params = abstract_params(cfg)
+    if getattr(mcfg, "packed", False):
+        return _packed_state_shardings(cfg, mcfg, mesh, params, laxes, tp_mode)
     if tp_mode == "dp":
         # paper-faithful extreme: one learner per CHIP, weights replicated
         # per learner — the only communication is the meta average (the
@@ -159,6 +161,61 @@ def state_shardings(cfg: ModelConfig, mcfg: MAvgConfig, mesh, *,
         step=NamedSharding(mesh, P()),
         comm_residual=comm_sh,
         topo=topo_sh,
+    )
+
+
+def _packed_state_shardings(cfg: ModelConfig, mcfg: MAvgConfig, mesh, params,
+                            laxes, tp_mode: str) -> MetaState:
+    """Shardings for the packed flat meta-plane (repro.pack, DESIGN.md §9).
+
+    Every plane is one (rows, 128) buffer (or a (lead, rows, 128) stack),
+    so per-leaf tensor-parallel specs don't apply; instead the packed row
+    dimension is sharded over 'model' when it divides cleanly (each shard
+    keeps the 8-row sublane multiple) — ZeRO-style: the local phase's
+    unpack gathers what its matmuls need, the meta phase stays sharded.
+    The learner axis of stacked planes shards over the learner mesh axes
+    exactly as per-leaf learners did. The returned MetaState carries the
+    same static PackSpec as the live state, so jit in_shardings matches
+    structurally.
+    """
+    from repro.pack import make_pack_spec
+
+    spec = make_pack_spec(params, dtype=mcfg.meta_dtype)
+    if tp_mode == "dp":
+        laxes = tuple(mesh.axis_names)
+    lax_spec = laxes if len(laxes) > 1 else laxes[0]
+    row_ax = None
+    if (tp_mode != "dp" and "model" in mesh.shape
+            and spec.rows % (mesh.shape["model"] * 8) == 0):
+        row_ax = "model"
+    ns = lambda *s: NamedSharding(mesh, P(*s))
+    plane = ns(row_ax, None)  # (rows, 128) meta planes
+    stacked = ns(lax_spec, row_ax, None)  # (L, rows, 128) learner planes
+
+    from repro.comm import uses_error_feedback
+
+    topo_sh = None
+    if mcfg.algorithm in AVERAGING_ALGOS and mcfg.topology.kind != "flat":
+        topo_abs = jax.eval_shape(
+            lambda p: init_state(p, mcfg), params
+        ).topo
+        # hierarchical (G, ...) stacks replicated (G is small and rarely
+        # matches a mesh axis), gossip per-learner stacks like learners
+        topo_sh = jax.tree.map(lambda _: ns(), topo_abs)
+        if mcfg.topology.kind == "gossip":
+            topo_sh["params"] = stacked
+            topo_sh["momentum"] = stacked
+
+    return MetaState(
+        global_params=plane,
+        momentum=plane,
+        learners=stacked,
+        local_momentum=None,
+        stale_queue=None,
+        step=ns(),
+        comm_residual=stacked if uses_error_feedback(mcfg) else None,
+        topo=topo_sh,
+        spec=spec,
     )
 
 

@@ -35,6 +35,7 @@ from repro.core.trainer import Trainer
 from repro.data import lm_batch_fn, lm_eval_set
 from repro.models import api as model_api
 from repro.optim import warmup_cosine
+from repro.pack import unpack_params
 
 
 def main() -> None:
@@ -136,7 +137,7 @@ def main() -> None:
     history = trainer.run()
 
     eval_batch = lm_eval_set(cfg, n=32, seq_len=args.seq)
-    loss, _ = jax.jit(loss_fn)(trainer.state.global_params, eval_batch)
+    loss, _ = jax.jit(loss_fn)(unpack_params(trainer.state), eval_batch)
     print(f"\nfinal train loss {history[-1]['loss']:.4f}  "
           f"eval loss {float(loss):.4f}  "
           f"samples {history[-1]['samples']}")

@@ -1,0 +1,218 @@
+"""The packed flat meta-plane: the whole parameter pytree as ONE
+lane-aligned (rows, 128) buffer (DESIGN.md §9).
+
+The paper's meta level treats the model as a single vector (Algorithm 1's
+w~, v are vectors; the communication analyses of Yu, Jin & Yang 2019 and
+Zhou & Cong 2017 are vector analyses). Per-leaf execution pays O(leaves)
+where the math is O(1): every meta-plane op — block momentum, quantize,
+neighbor mix, EF algebra — launched one kernel per pytree leaf and padded
+each leaf to its own 8x128 tile. For the production configs (llama3-405b,
+qwen1.5-110b: hundreds of leaves) that is hundreds of tiny launches per
+meta step and up to 1023 wasted padded elements per leaf.
+
+``PackSpec`` is the static layout, computed once from the param pytree:
+
+  * every leaf occupies ``[offset, offset + size)`` of the flat vector,
+    with ``offset`` a multiple of LANES=128 (lane-aligned: each leaf
+    starts on a lane boundary, bounding per-leaf waste to < 128 elements
+    instead of < 1024);
+  * the total is padded once to ``rows * 128`` with ``rows % 8 == 0``
+    (the sublane multiple every Pallas kernel in this repo assumes);
+  * padding slots are ALWAYS ZERO — pack() writes zeros, and every meta
+    op preserves them (elementwise updates of 0 by 0, quantize of 0 is 0,
+    doubly-stochastic mixes of 0 are 0), so norms/means over the packed
+    plane equal their per-leaf values exactly.
+
+The spec is hashable and compares by value, so it can ride in
+``MetaState.spec`` as a *static* pytree field: jit caches on it, state
+pytrees from ``init_state`` / ``abstract_state`` / ``state_shardings``
+match structurally, and ``meta_step`` can unpack at the learner boundary
+without being handed the layout separately.
+
+Stacked planes: a leading learner/group axis is just vmap —
+``pack_stacked`` / ``unpack_stacked`` map the same layout over axis 0,
+giving the (L, rows, 128) learner plane and (G, rows, 128) group planes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+LANES = 128
+SUBLANES = 8
+
+
+def _path_key(p) -> str:
+    """Same key format as checkpoint/npz.py (slash-joined tree paths)."""
+    for attr in ("key", "idx", "name"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
+def _align(n: int, to: int) -> int:
+    return -(-n // to) * to
+
+
+@dataclass(frozen=True)
+class PackSpec:
+    """Static layout of one parameter pytree in the flat meta-plane.
+
+    All fields are hashable (tuples / strings / a treedef), so the spec
+    itself is a valid static jit argument and a valid static field of a
+    registered dataclass pytree.
+    """
+
+    treedef: Any  # jax PyTreeDef of the parameter pytree
+    paths: tuple  # slash-joined tree path per leaf (checkpoint keys)
+    shapes: tuple  # original leaf shapes
+    dtypes: tuple  # original leaf dtype names (round-trip restore)
+    offsets: tuple  # lane-aligned start offset of each leaf
+    sizes: tuple  # element count of each leaf
+    rows: int  # buffer rows; rows % 8 == 0
+    dtype: str  # buffer dtype name
+
+    # ------------------------------------------------------------------
+    @property
+    def num_leaves(self) -> int:
+        return len(self.sizes)
+
+    @property
+    def total(self) -> int:
+        """Padded element count of the packed buffer."""
+        return self.rows * LANES
+
+    @property
+    def pad_waste(self) -> int:
+        """Padded-but-unused elements of the packed layout (alignment
+        gaps between leaves + the single tail pad)."""
+        return self.total - sum(self.sizes)
+
+    def per_leaf_pad_waste(self) -> int:
+        """Padded elements the legacy per-leaf (rows, 128) layout wastes:
+        each leaf independently padded to an 8x128 tile multiple."""
+        return sum(
+            _align(_align(n, LANES) // LANES, SUBLANES) * LANES - n
+            for n in self.sizes
+        )
+
+    # ------------------------------------------------------------------
+    def pack(self, tree, dtype=None):
+        """tree -> (rows, 128) buffer in ``dtype`` (default: spec dtype).
+
+        Leaves are cast to the buffer dtype; alignment gaps and the tail
+        pad are written as zeros (the padding invariant every packed op
+        relies on).
+        """
+        dt = jnp.dtype(self.dtype if dtype is None else dtype)
+        leaves = self.treedef.flatten_up_to(tree)
+        parts = []
+        end = 0
+        for leaf, off, size in zip(leaves, self.offsets, self.sizes):
+            if off > end:  # alignment gap before this leaf
+                parts.append(jnp.zeros((off - end,), dt))
+            parts.append(jnp.asarray(leaf).reshape(-1).astype(dt))
+            end = off + size
+        if self.total > end:
+            parts.append(jnp.zeros((self.total - end,), dt))
+        return jnp.concatenate(parts).reshape(self.rows, LANES)
+
+    def unpack(self, buf, dtype=None):
+        """(rows, 128) buffer -> tree.
+
+        ``dtype=None`` restores each leaf's recorded dtype (bit-exact
+        round trip for f32/bf16 params through an f32 buffer);
+        ``dtype=...`` casts every leaf to that dtype instead (the learner
+        boundary keeps leaves in the buffer's compute dtype).
+        """
+        flat = buf.reshape(-1)
+        leaves = [
+            flat[off:off + size].reshape(shape).astype(
+                dt if dtype is None else dtype
+            )
+            for off, size, shape, dt in zip(
+                self.offsets, self.sizes, self.shapes, self.dtypes
+            )
+        ]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    # -- stacked planes: leading learner/group axes are vmapped layout --
+    def pack_stacked(self, tree, dtype=None):
+        """(lead, ...) leaves -> (lead, rows, 128); any single lead axis."""
+        return jax.vmap(lambda t: self.pack(t, dtype))(tree)
+
+    def unpack_stacked(self, buf, dtype=None):
+        """(lead, rows, 128) -> tree of (lead, ...) leaves."""
+        return jax.vmap(lambda b: self.unpack(b, dtype))(buf)
+
+    # ------------------------------------------------------------------
+    def pack_numpy(self, leaves, dtype=None) -> np.ndarray:
+        """Host-side pack of numpy leaves (checkpoint legacy load): the
+        leaves may carry any shared leading stack axes (L / G / tau)
+        before each recorded leaf shape."""
+        dt = np.dtype(self.dtype if dtype is None else dtype)
+        lead = tuple(leaves[0].shape[:leaves[0].ndim - len(self.shapes[0])])
+        buf = np.zeros(lead + (self.total,), dt)
+        for arr, off, size, shape in zip(
+            leaves, self.offsets, self.sizes, self.shapes
+        ):
+            assert tuple(arr.shape) == lead + tuple(shape), (
+                arr.shape, lead, shape
+            )
+            buf[..., off:off + size] = arr.reshape(lead + (-1,))
+        return buf.reshape(lead + (self.rows, LANES))
+
+    def layout_dict(self) -> dict:
+        """JSON-able layout (saved alongside packed checkpoints so a
+        packed .npz can be decoded without re-deriving the spec)."""
+        return {
+            "paths": list(self.paths),
+            "shapes": [list(s) for s in self.shapes],
+            "dtypes": list(self.dtypes),
+            "offsets": list(self.offsets),
+            "sizes": list(self.sizes),
+            "rows": self.rows,
+            "dtype": self.dtype,
+        }
+
+
+def make_pack_spec(tree, dtype=None) -> PackSpec:
+    """Compute the lane-aligned flat layout of ``tree`` once.
+
+    ``dtype``: buffer dtype (default: the jnp result type of all leaf
+    dtypes — f32 for f32/bf16 param trees, keeping every leaf's pack ->
+    unpack round trip bit-exact).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = tuple("/".join(_path_key(p) for p in path) for path, _ in flat)
+    leaves = [leaf for _, leaf in flat]
+    shapes = tuple(tuple(x.shape) for x in leaves)
+    dtypes = tuple(jnp.dtype(x.dtype).name for x in leaves)
+    sizes = tuple(int(np.prod(s, dtype=np.int64)) if s else 1 for s in shapes)
+    offsets, off = [], 0
+    for n in sizes:
+        offsets.append(off)
+        off = _align(off + n, LANES)
+    rows = _align(_align(off, LANES) // LANES, SUBLANES)
+    if dtype is None:
+        dtype = jnp.result_type(*[jnp.dtype(d) for d in dtypes]).name
+    return PackSpec(
+        treedef=treedef, paths=paths, shapes=shapes, dtypes=dtypes,
+        offsets=tuple(offsets), sizes=sizes, rows=max(rows, SUBLANES),
+        dtype=jnp.dtype(dtype).name,
+    )
+
+
+def unpack_params(state):
+    """Global params of a MetaState as the model pytree — identity on
+    per-leaf (packed=False) states, spec.unpack on packed ones. The
+    eval/serve boundary helper."""
+    spec = getattr(state, "spec", None)
+    if spec is None:
+        return state.global_params
+    return spec.unpack(state.global_params)

@@ -20,10 +20,15 @@ from hypothesis import given, settings, strategies as st
 from repro.configs.base import MAvgConfig
 from repro.core.meta import init_state, make_meta_step
 from repro.models.simple import mlp_init, mlp_loss
+from repro.pack import make_pack_spec
 from repro.utils import tree_axpy, tree_norm, tree_sub
 
 D, C, H = 8, 4, 16
 PARAMS = mlp_init(jax.random.PRNGKey(0), D, H, C)
+# the states below ride the packed flat meta-plane (MAvgConfig.packed
+# default); closed-form comparisons against PARAMS happen in packed space
+SPEC = make_pack_spec(PARAMS)
+PARAMS_PACKED = SPEC.pack(PARAMS)
 
 
 def _batches(seed, L, K, B=4):
@@ -98,9 +103,9 @@ def test_i4_block_momentum_closed_form(seed, mu, eta):
     s_kavg, _ = jax.jit(make_meta_step(mlp_loss, cfg0))(
         init_state(PARAMS, cfg0), b
     )
-    d = tree_sub(s_kavg.global_params, PARAMS)  # kavg: w' = w + d
+    d = tree_sub(s_kavg.global_params, PARAMS_PACKED)  # kavg: w' = w + d
     v_expect = jax.tree.map(lambda di: eta * di, d)  # v0 = 0
-    w_expect = tree_axpy(1.0, v_expect, PARAMS)
+    w_expect = tree_axpy(1.0, v_expect, PARAMS_PACKED)
     _close(state1.momentum, v_expect)
     _close(state1.global_params, w_expect)
 
@@ -114,7 +119,7 @@ def test_i5_k1_p1_is_sgd(seed, lr):
     (_, _), g = jax.value_and_grad(mlp_loss, has_aux=True)(
         PARAMS, jax.tree.map(lambda a: a[0, 0], b)
     )
-    expect = tree_axpy(-lr, g, PARAMS)
+    expect = SPEC.pack(tree_axpy(-lr, g, PARAMS))
     _close(s.global_params, expect)
 
 
@@ -127,9 +132,9 @@ def test_i6_downpour_warmup():
         state, _ = step(state, _batches(i, 2, 2))
         # global params frozen until the staleness queue warms up
         if i < 2:
-            _close(state.global_params, PARAMS)
+            _close(state.global_params, PARAMS_PACKED)
     state, _ = step(state, _batches(99, 2, 2))
-    delta = float(tree_norm(tree_sub(state.global_params, PARAMS)))
+    delta = float(tree_norm(tree_sub(state.global_params, PARAMS_PACKED)))
     assert delta > 1e-6  # updates flow after warmup
 
 

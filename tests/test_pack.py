@@ -1,0 +1,436 @@
+"""repro.pack acceptance tests: the packed flat meta-plane (DESIGN.md §9).
+
+Invariants:
+  PK1  pack -> unpack round-trips every models/ architecture's param tree
+       bit-exactly, preserving per-leaf dtypes; stacked (L, ...) planes
+       round-trip through pack_stacked/unpack_stacked the same way.
+  PK2  PackSpec layout: lane-aligned offsets, non-overlapping slots,
+       8-row buffer, padding waste never exceeds the legacy per-leaf
+       8x128 tile waste; the spec is hashable and value-equal across
+       reconstructions (the static-field contract).
+  PK3  packed meta-step parity with the legacy per-leaf path: dense
+       comm is bit-level (identical algebra, different layout) for
+       flat / hierarchical / gossip; int8+EF agrees to quantization
+       noise (different chunk boundaries by design) and stays unbiased.
+  PK4  the fused pack_update kernel (interpret) matches its jnp oracle
+       (shared dither: bit-identical rounding decisions) and satisfies
+       the EF invariant delta + e = C(delta + e) + e' exactly.
+  PK5  padding slots stay zero through training (the invariant that
+       makes packed norms/means equal per-leaf ones).
+  PK6  a legacy per-leaf checkpoint loads bit-exactly into a packed
+       MetaState template (layout-converting restore), and packed
+       checkpoints carry the __packspec__ decode sidecar.
+"""
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_packspec, load_state, save_state
+from repro.configs.base import (
+    ARCH_IDS,
+    CommConfig,
+    MAvgConfig,
+    TopologyConfig,
+    get_config,
+)
+from repro.core.meta import init_state, make_meta_step
+from repro.kernels import ops, ref
+from repro.models import api as model_api
+from repro.models.simple import mlp_init, mlp_loss
+from repro.pack import make_pack_spec, unpack_params
+from repro.utils import tree_norm, tree_sub
+
+D, C, H = 8, 4, 16
+PARAMS = mlp_init(jax.random.PRNGKey(0), D, H, C)
+RNG = np.random.RandomState(3)
+
+
+def _batches(seed, L, K, B=4):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    return {
+        "x": jax.random.normal(kx, (L, K, B, D)),
+        "y": jax.random.randint(ky, (L, K, B), 0, C),
+    }
+
+
+def _run(cfg, n_steps=3, params=PARAMS):
+    state = init_state(params, cfg)
+    step = jax.jit(make_meta_step(mlp_loss, cfg))
+    for i in range(n_steps):
+        state, metrics = step(state, _batches(i, cfg.num_learners, cfg.k_steps))
+    return state, metrics
+
+
+def _bitwise(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# PK1: round trip over every architecture's param tree
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_pk1_roundtrip_all_archs(arch):
+    cfg = get_config(arch).reduced()
+    params = model_api.init_params(jax.random.PRNGKey(0), cfg)
+    spec = make_pack_spec(params)
+    buf = spec.pack(params)
+    assert buf.shape == (spec.rows, 128) and spec.rows % 8 == 0
+    restored = spec.unpack(buf)
+    assert (jax.tree_util.tree_structure(restored)
+            == jax.tree_util.tree_structure(params))
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pk1_stacked_roundtrip():
+    spec = make_pack_spec(PARAMS)
+    L = 3
+    stacked = jax.tree.map(
+        lambda x: jnp.asarray(
+            RNG.randn(L, *x.shape), jnp.float32
+        ),
+        PARAMS,
+    )
+    buf = spec.pack_stacked(stacked)
+    assert buf.shape == (L, spec.rows, 128)
+    restored = spec.unpack_stacked(buf)
+    _bitwise(stacked, restored)
+    # the L-axis is positional: plane j is exactly pack(tree slice j)
+    one = spec.pack(jax.tree.map(lambda x: x[1], stacked))
+    np.testing.assert_array_equal(np.asarray(buf[1]), np.asarray(one))
+
+
+def test_pk1_dtype_cast_roundtrip():
+    """bf16 leaves survive an f32 buffer bit-exactly (cast up then down)."""
+    tree = {"a": jnp.asarray(RNG.randn(33), jnp.bfloat16),
+            "b": jnp.asarray(RNG.randn(5, 7), jnp.float32)}
+    spec = make_pack_spec(tree)
+    assert spec.dtype == "float32"  # result type of bf16 + f32
+    restored = spec.unpack(spec.pack(tree))
+    assert restored["a"].dtype == jnp.bfloat16
+    assert restored["b"].dtype == jnp.float32
+    _bitwise(tree, restored)
+
+
+# ---------------------------------------------------------------------------
+# PK2: layout invariants + static-field contract
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["llama3-405b", "hymba-1.5b", "xlstm-350m"])
+def test_pk2_layout_invariants(arch):
+    from repro.launch.specs import abstract_params
+
+    spec = make_pack_spec(abstract_params(get_config(arch)))
+    end = 0
+    for off, size in zip(spec.offsets, spec.sizes):
+        assert off % 128 == 0, "leaf starts off a lane boundary"
+        assert off >= end, "overlapping leaf slots"
+        end = off + size
+    assert end <= spec.total and spec.rows % 8 == 0
+    # lane alignment bounds the gap waste at < 128 per leaf + tail tile
+    assert spec.pad_waste < 128 * spec.num_leaves + 8 * 128
+    # and never exceeds the legacy per-leaf 8x128 tile padding
+    assert spec.pad_waste <= spec.per_leaf_pad_waste() + 8 * 128
+
+
+def test_pk2_spec_static_contract():
+    s1 = make_pack_spec(PARAMS)
+    s2 = make_pack_spec(jax.tree.map(jnp.zeros_like, PARAMS))
+    assert s1 == s2 and hash(s1) == hash(s2)  # value identity, not object
+    # jit caches on the static spec: same-structure states share a trace
+    state = init_state(PARAMS, MAvgConfig(num_learners=2, k_steps=1))
+    assert state.spec == s1
+    assert "spec" not in [  # static field contributes no leaves
+        str(p) for p, _ in jax.tree_util.tree_flatten_with_path(state)[0]
+    ]
+
+
+# ---------------------------------------------------------------------------
+# PK3: packed vs per-leaf meta-step parity
+# ---------------------------------------------------------------------------
+
+TOPOLOGIES = [
+    TopologyConfig(),
+    TopologyConfig(kind="hierarchical", groups=2, outer_every=2,
+                   outer_momentum=0.3),
+    TopologyConfig(kind="gossip", graph="ring", momentum_tracking=True),
+]
+
+
+@pytest.mark.parametrize("topo", TOPOLOGIES)
+def test_pk3_dense_parity_bitwise(topo):
+    cfg = MAvgConfig(algorithm="mavg", num_learners=4, k_steps=2,
+                     learner_lr=0.1, momentum=0.6, topology=topo)
+    s_packed, m_p = _run(cfg)
+    s_leaf, m_l = _run(dc.replace(cfg, packed=False))
+    spec = s_packed.spec
+    # identical algebra on a different layout: repacking the per-leaf
+    # planes reproduces the packed planes bit for bit
+    _bitwise(s_packed.global_params, spec.pack(s_leaf.global_params))
+    _bitwise(s_packed.momentum, spec.pack(s_leaf.momentum))
+    _bitwise(s_packed.learners,
+             spec.pack_stacked(s_leaf.learners, dtype=cfg.compute_dtype))
+    np.testing.assert_allclose(float(m_p["loss"]), float(m_l["loss"]),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("topo", TOPOLOGIES)
+def test_pk3_int8_ef_parity(topo):
+    """Quantized cells: the packed wire chunks the packed layout, the
+    per-leaf wire chunks each leaf — same scheme, different chunk
+    boundaries and dither draws, so parity is to quantization noise
+    (bounded well below the displacement scale), not bitwise."""
+    inner = CommConfig(scheme="int8", error_feedback=True)
+    if topo.kind == "flat":
+        cfg = MAvgConfig(algorithm="mavg", num_learners=4, k_steps=2,
+                         learner_lr=0.1, momentum=0.6, comm=inner,
+                         topology=topo)
+    else:
+        cfg = MAvgConfig(algorithm="mavg", num_learners=4, k_steps=2,
+                         learner_lr=0.1, momentum=0.6,
+                         topology=dc.replace(topo, inner_comm=inner))
+    s_packed, m_p = _run(cfg, n_steps=4)
+    s_leaf, m_l = _run(dc.replace(cfg, packed=False), n_steps=4)
+    gp_p = unpack_params(s_packed)
+    gp_l = unpack_params(s_leaf)
+    scale = float(tree_norm(gp_l))
+    diff = float(tree_norm(tree_sub(gp_p, gp_l)))
+    assert diff / scale < 5e-3, (diff, scale)
+    np.testing.assert_allclose(float(m_p["loss"]), float(m_l["loss"]),
+                               rtol=2e-2)
+    for leaf in jax.tree.leaves(gp_p):
+        assert jnp.isfinite(leaf).all()
+
+
+@pytest.mark.parametrize("scheme", ["topk", "int8_topk"])
+def test_pk3_topk_parity(scheme):
+    """Packed top-k selects over the whole model vector where the
+    per-leaf path budgeted each leaf separately (comm/topk.py) — a
+    deliberate semantic shift pinned here at the trajectory level: same
+    convergence, bounded displacement-scale divergence, and the EF
+    residual keeps the skipped mass."""
+    cfg = MAvgConfig(algorithm="mavg", num_learners=4, k_steps=2,
+                     learner_lr=0.1, momentum=0.6,
+                     comm=CommConfig(scheme=scheme, error_feedback=True))
+    s_packed, m_p = _run(cfg, n_steps=4)
+    s_leaf, m_l = _run(dc.replace(cfg, packed=False), n_steps=4)
+    gp_p, gp_l = unpack_params(s_packed), unpack_params(s_leaf)
+    diff = float(tree_norm(tree_sub(gp_p, gp_l)))
+    assert diff / float(tree_norm(gp_l)) < 5e-2
+    np.testing.assert_allclose(float(m_p["loss"]), float(m_l["loss"]),
+                               rtol=5e-2)
+    assert float(jnp.abs(s_packed.comm_residual).sum()) > 0
+
+
+def test_pk3_eamsgd_downpour_packed_match_per_leaf():
+    """The non-averaging algorithms ride the packed planes through the
+    same tree algebra — parity is bitwise there too."""
+    for algo, extra in [("eamsgd", {}), ("downpour", {"staleness": 2})]:
+        cfg = MAvgConfig(algorithm=algo, num_learners=3, k_steps=2,
+                         learner_lr=0.1, momentum=0.5, **extra)
+        s_packed, _ = _run(cfg)
+        s_leaf, _ = _run(dc.replace(cfg, packed=False))
+        _bitwise(s_packed.global_params,
+                 s_packed.spec.pack(s_leaf.global_params))
+
+
+def test_pk3_packed_pallas_matches_jnp():
+    """use_pallas routes the packed planes through the fused kernels
+    (one launch per op) — same trajectory as the jnp path."""
+    base = dict(algorithm="mavg", num_learners=4, k_steps=2, momentum=0.6)
+    comm = CommConfig(scheme="int8", error_feedback=True)
+    s_jnp, _ = _run(MAvgConfig(**base, use_pallas=False, comm=comm))
+    s_pl, _ = _run(MAvgConfig(
+        **base, use_pallas=True, comm=dc.replace(comm, use_pallas=True)))
+    np.testing.assert_allclose(
+        np.asarray(s_jnp.global_params), np.asarray(s_pl.global_params),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# PK4: fused pack_update kernel vs oracle + EF invariant
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("L,rows,block", [(2, 8, 8), (4, 64, 64),
+                                          (3, 24, None)])
+@pytest.mark.parametrize("with_residual", [True, False])
+def test_pk4_pack_update_kernel_matches_ref(L, rows, block, with_residual):
+    w = jnp.asarray(RNG.randn(L, rows, 128) * 0.02, jnp.float32)
+    g = jnp.asarray(RNG.randn(rows, 128) * 0.02, jnp.float32)
+    e = (jnp.asarray(RNG.randn(L, rows, 128) * 1e-3, jnp.float32)
+         if with_residual else None)
+    u = jnp.asarray(RNG.rand(L, rows, 128), jnp.float32)
+    ck, errk, sk = ops.pack_update(w, g, e, u, qmax=127, block=block,
+                                   use_pallas=True, interpret=True)
+    cr, errr, sr = ops.pack_update(w, g, e, u, qmax=127, block=block,
+                                   use_pallas=False)
+    # shared dither: rounding decisions identical, scales to 1 ulp
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(ck), np.asarray(cr),
+                               rtol=1e-5, atol=1e-8)
+    np.testing.assert_allclose(np.asarray(errk), np.asarray(errr),
+                               rtol=1e-5, atol=1e-8)
+    # EF invariant holds exactly on both routes: delta (+e) = c + err
+    d = np.asarray(w - g[None]) + (np.asarray(e) if e is not None else 0)
+    np.testing.assert_allclose(np.asarray(ck + errk), d, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(cr + errr), d, atol=1e-7)
+
+
+def test_pk4_fused_reduce_matches_compress_stack_geometry():
+    """The fused QuantReducer.reduce and the compress-only path (gossip /
+    masked hierarchical) share chunk geometry and dither, so the same
+    delta quantizes identically through either route — the invariant
+    behind the all-present == static bitwise tests."""
+    from repro.comm import ErrorFeedback, QuantReducer
+    from repro.topology.gossip import compress_stack
+
+    red = ErrorFeedback(QuantReducer(dtype="int8"))
+    L, rows = 4, 16
+    learners = jnp.asarray(RNG.randn(L, rows, 128) * 0.1, jnp.float32)
+    gp = jnp.asarray(RNG.randn(rows, 128) * 0.1, jnp.float32)
+    res = jnp.asarray(RNG.randn(L, rows, 128) * 1e-3, jnp.float32)
+    step = jnp.int32(5)
+    avg, new_res, m = red.reduce(learners, gp, res, step=step)
+    delta = learners - gp[None] + res
+    c2, res2, wire = compress_stack(red, learners - gp[None], res,
+                                    step=step, learners=learners)
+    np.testing.assert_allclose(np.asarray(new_res), np.asarray(res2),
+                               rtol=1e-6, atol=1e-8)
+    np.testing.assert_allclose(
+        np.asarray(avg), np.asarray(gp + jnp.mean(c2, 0)),
+        rtol=1e-6, atol=1e-8,
+    )
+    assert m["comm_bytes"] == wire
+
+
+# ---------------------------------------------------------------------------
+# PK5: padding slots stay zero through training
+# ---------------------------------------------------------------------------
+
+
+def _pad_mask(spec):
+    mask = np.ones((spec.total,), bool)
+    for off, size in zip(spec.offsets, spec.sizes):
+        mask[off:off + size] = False
+    return mask.reshape(spec.rows, 128)
+
+
+@pytest.mark.parametrize("topo", TOPOLOGIES)
+def test_pk5_padding_stays_zero(topo):
+    inner = CommConfig(scheme="int8", error_feedback=True)
+    cfg = MAvgConfig(
+        algorithm="mavg", num_learners=4, k_steps=2, momentum=0.6,
+        comm=inner if topo.kind == "flat" else CommConfig(),
+        topology=(topo if topo.kind == "flat"
+                  else dc.replace(topo, inner_comm=inner)),
+    )
+    state, _ = _run(cfg, n_steps=4)
+    mask = _pad_mask(state.spec)
+    if not mask.any():
+        pytest.skip("layout has no padding to check")
+    for name, plane in [("global_params", state.global_params),
+                        ("momentum", state.momentum),
+                        ("learners", state.learners)]:
+        arr = np.asarray(plane, np.float32)
+        assert np.all(arr[..., mask] == 0.0), name
+    for k, v in (state.topo or {}).items():
+        if v is not None and np.asarray(v).ndim >= 2 \
+                and np.asarray(v).shape[-2:] == mask.shape:
+            assert np.all(np.asarray(v, np.float32)[..., mask] == 0.0), k
+
+
+# ---------------------------------------------------------------------------
+# PK6: checkpoint — legacy per-leaf load + packed sidecar
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topo", [
+    TopologyConfig(),
+    TopologyConfig(kind="hierarchical", groups=2, outer_every=2),
+    TopologyConfig(kind="gossip", graph="exponential",
+                   inner_comm=CommConfig(scheme="int8",
+                                         error_feedback=True)),
+])
+def test_pk6_legacy_checkpoint_loads_into_packed(tmp_path, topo):
+    cfg = MAvgConfig(
+        algorithm="mavg", num_learners=4, k_steps=2, momentum=0.6,
+        comm=(CommConfig(scheme="int8", error_feedback=True)
+              if topo.kind == "flat" else CommConfig()),
+        topology=topo,
+    )
+    legacy = dc.replace(cfg, packed=False)
+    s_leaf, _ = _run(legacy)
+    path = save_state(str(tmp_path), s_leaf, 3)
+    assert load_packspec(path) is None  # per-leaf save: no sidecar
+
+    template = jax.eval_shape(lambda: init_state(PARAMS, cfg))
+    restored = load_state(path, template)
+    spec = restored.spec
+    _bitwise(restored.global_params, spec.pack(s_leaf.global_params))
+    _bitwise(restored.learners,
+             spec.pack_stacked(s_leaf.learners, dtype=cfg.compute_dtype))
+    assert int(restored.step) == 3
+
+    # packed re-save round-trips bit-exactly and carries the decode map
+    step = jax.jit(make_meta_step(mlp_loss, cfg))
+    live, _ = step(restored, _batches(3, 4, 2))
+    p2 = save_state(str(tmp_path), live, 4)
+    side = load_packspec(p2)
+    assert side is not None and side["rows"] == spec.rows
+    assert side["paths"] == list(spec.paths)
+    r2 = load_state(p2, jax.eval_shape(lambda: live))
+    _bitwise(live, r2)
+
+
+@pytest.mark.parametrize("scheme", ["int8", "fp8", "topk", "int8_topk"])
+def test_pk3_wire_bytes_exclude_padding(scheme):
+    """Padding slots must not count as wire payload: the packed path's
+    comm_bytes stay comparable to the per-leaf accounting for the same
+    scheme (meta_step rescales by the real-parameter fraction)."""
+    cfg = MAvgConfig(algorithm="mavg", num_learners=4, k_steps=2,
+                     learner_lr=0.1, momentum=0.6,
+                     comm=CommConfig(scheme=scheme, error_feedback=False))
+    _, m_p = _run(cfg, n_steps=1)
+    _, m_l = _run(dc.replace(cfg, packed=False), n_steps=1)
+    for key in ("comm_bytes", "comm_bytes_dense"):
+        ratio = float(m_p[key]) / float(m_l[key])
+        assert 0.9 < ratio < 1.1, (scheme, key, ratio, m_p[key], m_l[key])
+
+
+def test_pk6_layout_mismatch_rejected_by_sidecar(tmp_path):
+    """A packed checkpoint whose leaf layout differs from the template's
+    can still match every plane's (rows, 128) shape (rows quantizes to
+    8x128 tiles) — the __packspec__ sidecar must catch it instead of
+    restoring weights at wrong offsets."""
+    cfg = MAvgConfig(algorithm="mavg", num_learners=2, k_steps=2)
+    s, _ = _run(cfg)
+    path = save_state(str(tmp_path), s, 1)
+    # same total parameter count, different leaf split -> same rows
+    flat = {"w": jnp.zeros((sum(s.spec.sizes),), jnp.float32)}
+    other = jax.eval_shape(lambda: init_state(flat, cfg))
+    assert other.spec.rows == s.spec.rows  # the shape check alone passes
+    with pytest.raises(ValueError, match="layout"):
+        load_state(path, other)
+
+
+def test_pk6_packed_checkpoint_rejected_by_mismatched_template(tmp_path):
+    """A packed checkpoint must not silently load into a template of a
+    different layout (learner count changes the stacked planes)."""
+    cfg = MAvgConfig(algorithm="mavg", num_learners=2, k_steps=2)
+    s, _ = _run(cfg)
+    path = save_state(str(tmp_path), s, 1)
+    bad = jax.eval_shape(
+        lambda: init_state(PARAMS, dc.replace(cfg, num_learners=4))
+    )
+    with pytest.raises(ValueError, match="shape"):
+        load_state(path, bad)

@@ -11,6 +11,7 @@ import pytest
 
 from repro.configs.base import MAvgConfig
 from repro.core.meta import init_state, make_meta_step
+from repro.pack import unpack_params
 from repro.utils import tree_norm
 
 DIM = 16
@@ -51,7 +52,7 @@ def test_grad_norm_below_bound(mu):
         noise = SIGMA * jax.random.normal(
             jax.random.PRNGKey(i), (P, K, B, DIM)
         )
-        g_true = A @ state.global_params["w"]
+        g_true = A @ unpack_params(state)["w"]
         sq_norms.append(float(g_true @ g_true))
         max_g = max(max_g, float(g_true @ g_true))
         state, _ = step(state, {"noise": noise})
@@ -105,6 +106,6 @@ def test_convergence_with_decreasing_eta():
                 jax.random.PRNGKey(1000 + i), (2, 2, 8, DIM)
             )
             state, _ = step(state, {"noise": noise})
-        g = A @ state.global_params["w"]
+        g = A @ unpack_params(state)["w"]
         results[eta] = float(g @ g)
     assert results[0.02] < results[0.1]
