@@ -124,6 +124,46 @@ def main(quick: bool = False, json_path: str | None = None):
         "kind": "hbm_passes", "op": "pack_update",
         "passes_naive": 9, "passes_fused": 7,
     })
+    rows.append({
+        # fused momentum->broadcast (kernels/fused_meta.py): block
+        # momentum (3R+2W of the meta plane) + tree_broadcast_learners'
+        # re-read of w~' (1R) collapse into one pass — the learner-plane
+        # writes (L per step) are identical on both sides and excluded
+        "kind": "hbm_passes", "op": "fused_momentum_broadcast",
+        "passes_naive": 6, "passes_fused": 5,
+        "plane_reads_removed": 1,
+    })
+    rows.append({
+        # compress-only variant (pack_update.pack_compress_3d): the
+        # compress-stage routes no longer read a synthesized zero gp
+        # plane per mix; without error feedback the err plane is not
+        # written either (with_err=False -> 4 passes)
+        "kind": "hbm_passes", "op": "pack_compress",
+        "passes_naive": 6, "passes_fused": 5, "passes_fused_no_ef": 4,
+        "plane_reads_removed": 1,
+    })
+    for r in rows[-2:]:
+        print(f"kernel,hbm_passes,{r['op']},"
+              f"{r['passes_naive']}->{r['passes_fused']}")
+
+    # fused momentum->broadcast: interpret-kernel parity at a macro size
+    rows_n, L = (512, 8) if not quick else (64, 4)
+    w2 = jax.random.normal(jax.random.fold_in(key, 8), (rows_n, 128))
+    v2 = jax.random.normal(jax.random.fold_in(key, 9), (rows_n, 128))
+    a2 = jax.random.normal(jax.random.fold_in(key, 10), (rows_n, 128))
+    fk = ops.fused_momentum_broadcast(
+        w2, v2, a2, mu=0.9, eta=1.0, num_learners=L,
+        ldtype=jnp.bfloat16, use_pallas=True, interpret=True,
+    )
+    fr = ref.fused_momentum_broadcast_ref(
+        w2, v2, a2, 0.9, 1.0, L, jnp.bfloat16
+    )
+    err2 = max(
+        float(jnp.max(jnp.abs(x.astype(jnp.float32) - y.astype(jnp.float32))))
+        for x, y in zip(fk, fr)
+    )
+    print(f"kernel,fused_momentum_broadcast_interpret_maxerr,{err2:.2e},abs")
+    assert err2 < 1e-5
 
     # flash attention: interpret-mode correctness timing at a macro size
     B, S, H, KV, D = (1, 512, 8, 2, 128) if not quick else (1, 128, 4, 2, 64)
@@ -144,6 +184,7 @@ def main(quick: bool = False, json_path: str | None = None):
         with open(json_path, "w") as f:
             json.dump(rows, f, indent=1)
         print(f"kernel,json,{json_path},written")
+    return rows
 
 
 if __name__ == "__main__":

@@ -1,27 +1,37 @@
-"""Packed flat meta-plane benchmark (repro.pack, DESIGN.md §9).
+"""Packed flat meta-plane benchmark (repro.pack, DESIGN.md §9/§10).
 
-Three layers of numbers:
+Four layers of numbers:
 
 1. *Parity* — the packed meta step against the legacy per-leaf path on
    the teacher-classification MLP, per topology (flat / hierarchical /
-   gossip) and comm scheme (dense / int8+EF). Dense cells must match to
-   f32 tolerances (identical algebra, different layout); int8+EF cells
-   agree to quantization noise (the packed wire uses per-learner chunks
-   over the packed layout, the per-leaf wire chunks each leaf — same
-   scheme, different chunk boundaries) and must land within 2% final
-   loss.
+   gossip) and comm scheme (dense / int8+EF). Dense cells must be
+   BITWISE (identical algebra, different layout); int8+EF cells agree to
+   quantization noise (the packed wire uses per-learner chunks over the
+   packed layout, the per-leaf wire chunks each leaf — same scheme,
+   different chunk boundaries) and must land within 2% final loss.
 2. *Launch/padding* — the O(leaves) -> O(1) collapse of meta-phase
    kernel launches per op, and the per-leaf 8x128 tile padding vs the
    packed lane-aligned layout, on the real configs' abstract param trees
    (exact static analysis, no allocation).
-3. *Timing* — wall-clock of the jitted meta step, packed vs per-leaf, on
+3. *Meta-phase HBM table* (DESIGN.md §10) — peak meta-state memory of
+   the donated vs functional meta mix and the HBM traffic of the fused
+   momentum->broadcast and compress-only kernels, at the llama3_405b
+   dry-run config. Peak memory and the compress-only gp-read removal are
+   MEASURED off the compiled dry-run HLO (roofline.hlo_cost.jit_cost —
+   AOT, nothing allocated); the fused-kernel pass counts are the Pallas
+   kernel's structural reads/writes (on CPU the interpret-mode lowering
+   dissolves the kernel boundary, so XLA-CPU traffic cannot show them).
+   Every zero-copy route is pinned bitwise against the functional / PR 4
+   path it replaces.
+4. *Timing* — wall-clock of the jitted meta step, packed vs per-leaf, on
    an enlarged MLP (CPU/XLA: what's measured here is mostly dispatch and
    fusion-count overhead — the per-leaf path's O(leaves) ops — not TPU
    HBM behavior).
 
 Prints ``pack,...`` CSV lines; ``--json PATH`` dumps every row as JSON
 (the CI artifact, like comm/topology/elastic benches). ``--smoke``
-shrinks steps for CI.
+shrinks steps for CI. Any row with ``ok: false`` makes the process (and
+benchmarks/run.py) exit non-zero.
 """
 from __future__ import annotations
 
@@ -111,24 +121,29 @@ def parity(quick: bool) -> list[dict]:
             float(jnp.max(jnp.abs(a - b))) for a, b in zip(gp_p, gp_l)
         )
         scale = max(float(jnp.max(jnp.abs(b))) for b in gp_l)
-        # dense: pure layout change, bitwise; int8: same scheme, moved
-        # chunk boundaries -> quantization noise; topk: a different
-        # sparsification operator (whole-model vs per-leaf selection),
-        # so trajectories diverge at the param level and the pin is the
-        # matched convergence (loss_ratio)
-        tol = 3e-1 if "topk" in name else 5e-2 if "int8" in name else 1e-5
+        # dense: pure layout change, BITWISE (diff exactly 0 — the pin
+        # that the fused momentum->broadcast route stayed on the PR 4
+        # trajectory); int8: same scheme, moved chunk boundaries ->
+        # quantization noise; topk: a different sparsification operator
+        # (whole-model vs per-leaf selection), so trajectories diverge at
+        # the param level and the pin is the matched convergence
+        # (loss_ratio)
+        bitwise = "topk" not in name and "int8" not in name
+        tol = 3e-1 if "topk" in name else 5e-2
         loss_ratio = l_packed[-1] / l_leaf[-1]
-        ok = diff / scale < tol and abs(loss_ratio - 1) < 0.02
+        ok = ((diff == 0.0 if bitwise else diff / scale < tol)
+              and abs(loss_ratio - 1) < 0.02)
         rows.append({
             "kind": "pack_parity", "cell": name, "steps": steps,
             "max_abs_diff": diff, "rel_diff": diff / scale,
+            "bitwise": bool(bitwise and diff == 0.0),
             "final_loss_packed": l_packed[-1],
             "final_loss_per_leaf": l_leaf[-1],
             "loss_ratio": loss_ratio, "ok": bool(ok),
         })
         print(f"pack,parity,{name},rel_diff={diff / scale:.2e},"
+              f"bitwise={rows[-1]['bitwise']},"
               f"loss_ratio={loss_ratio:.4f},{'ok' if ok else 'FAIL'}")
-        assert ok, rows[-1]
     return rows
 
 
@@ -136,6 +151,193 @@ def launches(quick: bool) -> list[dict]:
     from benchmarks.kernel_bench import meta_plane_rows
 
     return meta_plane_rows(quick=quick)
+
+
+# ---------------------------------------------------------------------------
+# meta-phase HBM table (DESIGN.md §10): donated peak memory + fused passes
+# ---------------------------------------------------------------------------
+
+HBM_ARCH = "llama3-405b"
+HBM_L = 8  # dry-run learner count of the donated/functional comparison
+HBM_MU = 0.7
+
+
+def hbm_table(quick: bool) -> list[dict]:
+    """The zero-copy meta phase, measured at the llama3_405b dry-run
+    config (AOT lowering on abstract planes — nothing is allocated, so
+    the full-scale numbers are exact on this CPU container)."""
+    from repro.configs.base import get_config
+    from repro.kernels import ref as kref
+    from repro.launch.specs import abstract_params
+    from repro.roofline.hlo_cost import jit_cost
+
+    spec = make_pack_spec(abstract_params(get_config(HBM_ARCH)))
+    rows_n, L = spec.rows, HBM_L
+    plane_b = spec.plane_bytes("float32")  # one (rows, 128) meta plane
+    sds = jax.ShapeDtypeStruct
+    gp = sds((rows_n, 128), jnp.float32)
+    v = sds((rows_n, 128), jnp.float32)
+    lrn = sds((L, rows_n, 128), jnp.float32)
+    avg = sds((rows_n, 128), jnp.float32)
+    out = []
+
+    def emit(row, line):
+        out.append(row)
+        print(line)
+
+    # ---- peak meta-state memory: functional vs donated (MEASURED) ------
+    # the dense flat meta mix on the packed planes: average + fused
+    # momentum->broadcast, state planes in and out
+    def meta_mix(gp, v, lrn):
+        a = jnp.mean(lrn.astype(jnp.float32), axis=0)
+        return kref.fused_momentum_broadcast_ref(
+            gp, v, a, HBM_MU, 1.0, L, lrn.dtype
+        )
+
+    fun = jit_cost(meta_mix, gp, v, lrn)
+    don = jit_cost(meta_mix, gp, v, lrn, donate_argnums=(0, 1, 2))
+    ratio = don.peak_state_bytes / fun.peak_state_bytes
+    ok = ratio <= 0.6 and don.alias_bytes > 0
+    emit({
+        "kind": "hbm_peak_state", "arch": HBM_ARCH, "learners": L,
+        "plane_bytes": plane_b,
+        "peak_functional_bytes": fun.peak_state_bytes,
+        "peak_donated_bytes": don.peak_state_bytes,
+        "peak_functional_planes": fun.peak_state_bytes / plane_b,
+        "peak_donated_planes": don.peak_state_bytes / plane_b,
+        "alias_planes": don.alias_bytes / plane_b,
+        "ratio": ratio, "ok": bool(ok),
+    }, f"pack,hbm,peak_meta_state,{HBM_ARCH},"
+       f"functional={fun.peak_state_bytes / 1e12:.2f}TB"
+       f"({fun.peak_state_bytes / plane_b:.0f} planes),"
+       f"donated={don.peak_state_bytes / 1e12:.2f}TB"
+       f"({don.peak_state_bytes / plane_b:.0f} planes),"
+       f"ratio={ratio:.2f},{'ok(<=0.6)' if ok else 'FAIL'}")
+
+    # ---- fused momentum->broadcast: kernel pass structure --------------
+    # the Pallas kernel's reads/writes (exact on TPU, where the
+    # pallas_call is opaque; CPU interpret-mode lowering dissolves the
+    # boundary, so XLA-CPU traffic cannot display this row)
+    unfused_r, unfused_w = 3 + 1, 2 + L  # bm(3R+2W) + broadcast(1R+LW)
+    fused_r, fused_w = 3, 2 + L  # fused_meta: 3R + (2+L)W
+    saved = unfused_r - fused_r
+    emit({
+        "kind": "hbm_fused_momentum_broadcast", "arch": HBM_ARCH,
+        "learners": L, "plane_bytes": plane_b,
+        "reads_unfused": unfused_r, "writes_unfused": unfused_w,
+        "reads_fused": fused_r, "writes_fused": fused_w,
+        "plane_reads_removed": saved,
+        "bytes_removed": saved * plane_b, "ok": saved >= 1,
+    }, f"pack,hbm,fused_momentum_broadcast,{HBM_ARCH},"
+       f"passes={unfused_r}R+{unfused_w}W->{fused_r}R+{fused_w}W,"
+       f"reads_removed={saved}({saved * plane_b / 1e12:.2f}TB/step),"
+       f"{'ok(>=1)' if saved >= 1 else 'FAIL'}")
+
+    # ---- compress-only kernel: gp-plane read removal (MEASURED) --------
+    # pack_update takes the gp plane as an argument and reads it even
+    # when the caller synthesized zeros (the compress-stage routes);
+    # pack_compress drops the argument, so the read disappears from the
+    # compiled HLO — measurable even on the jnp oracles
+    d = sds((L, rows_n, 128), jnp.float32)
+    u = sds((L, rows_n, 128), jnp.float32)
+    block = 64
+    old_c = jit_cost(
+        lambda d, g, u: kref.pack_update_ref(d, g, None, u, 127, block),
+        d, gp, u,
+    )
+    new_c = jit_cost(
+        lambda d, u: kref.pack_compress_ref(d, u, 127, block), d, u
+    )
+    delta = (old_c.hbm_bytes - new_c.hbm_bytes) / plane_b
+    # kernel structure: 3R+3W (d, zero-gp, u -> c, err, scales) vs
+    # 2R+3W on the EF route (err IS the next residual) / 2R+2W without
+    # EF (the err plane is never allocated — a pallas_call output can't
+    # be DCE'd, so with_err=False removes the write entirely)
+    emit({
+        "kind": "hbm_compress_only", "arch": HBM_ARCH, "learners": L,
+        "plane_bytes": plane_b,
+        "hbm_bytes_zero_gp": old_c.hbm_bytes,
+        "hbm_bytes_compress_only": new_c.hbm_bytes,
+        "plane_reads_removed_measured": delta,
+        "kernel_passes_ef": "3R+3W->2R+3W",
+        "kernel_passes_no_ef": "3R+3W->2R+2W", "ok": delta >= 1,
+    }, f"pack,hbm,compress_only,{HBM_ARCH},"
+       f"measured_plane_reads_removed={delta:.1f},"
+       f"kernel_passes=3R+3W->2R+3W(ef)/2R+2W(no-ef),"
+       f"{'ok(>=1)' if delta >= 1 else 'FAIL'}")
+
+    # ---- parity: every zero-copy route bitwise vs the PR 4 path --------
+    out += hbm_parity(quick)
+    return out
+
+
+def hbm_parity(quick: bool) -> list[dict]:
+    """Bitwise pins of the zero-copy routes against the functional / PR 4
+    paths they replace (the cheap MLP versions of tests/test_zero_copy)."""
+    import jax.random as jr
+
+    from repro.core.meta import make_jit_meta_step
+    from repro.kernels import ops as kops, ref as kref
+    from repro.topology.base import block_momentum_update
+    from repro.utils import tree_broadcast_learners, tree_cast
+
+    rows = []
+    steps = 4 if quick else 10
+    params = mlp_init(jax.random.PRNGKey(0), D, H, C)
+
+    # donated == functional, per topology cell
+    for name, topo, comm in (CELLS[0], CELLS[3], CELLS[5]):
+        cfg = MAvgConfig(algorithm="mavg", num_learners=P, k_steps=K,
+                         learner_lr=0.2, momentum=MU, comm=comm,
+                         topology=topo)
+        outs = {}
+        for donate in (False, True):
+            state = init_state(params, cfg)
+            step = make_jit_meta_step(mlp_loss, cfg, donate=donate)
+            for i in range(steps):
+                state, _ = step(state, _batches(i, P, K))
+            outs[donate] = state
+        same = all(
+            bool(jnp.array_equal(a, b)) for a, b in zip(
+                jax.tree.leaves(outs[False]), jax.tree.leaves(outs[True])
+            )
+        )
+        rows.append({"kind": "hbm_parity", "cell": f"donate_{name}",
+                     "steps": steps, "bitwise": same, "ok": same})
+        print(f"pack,hbm_parity,donate_{name},steps={steps},"
+              f"bitwise={same},{'ok' if same else 'FAIL'}")
+
+    # fused momentum->broadcast route == unfused two-step route
+    key = jr.PRNGKey(7)
+    w, v, a = (jr.normal(jr.fold_in(key, i), (24, 128), jnp.float32)
+               for i in range(3))
+    f_out = jax.jit(lambda w, v, a: kref.fused_momentum_broadcast_ref(
+        w, v, a, MU, 1.0, P, jnp.float32))(w, v, a)
+
+    def unfused(w, v, a):
+        gp, vv = block_momentum_update(w, v, a, mu=MU, eta=1.0)
+        return gp, vv, tree_broadcast_learners(
+            tree_cast(gp, jnp.float32), P)
+
+    u_out = jax.jit(unfused)(w, v, a)
+    same = all(bool(jnp.array_equal(x, y)) for x, y in zip(f_out, u_out))
+    rows.append({"kind": "hbm_parity", "cell": "fused_momentum_broadcast",
+                 "bitwise": same, "ok": same})
+    print(f"pack,hbm_parity,fused_momentum_broadcast,bitwise={same},"
+          f"{'ok' if same else 'FAIL'}")
+
+    # compress-only kernel == pack_update on a zero gp plane
+    d = jr.normal(jr.fold_in(key, 3), (P, 16, 128), jnp.float32) * 0.1
+    u = jr.uniform(jr.fold_in(key, 4), (P, 16, 128), jnp.float32)
+    co = kops.pack_compress(d, u, use_pallas=False)
+    pu = kops.pack_update(d, jnp.zeros((16, 128), jnp.float32), None, u,
+                          use_pallas=False)
+    same = all(bool(jnp.array_equal(x, y)) for x, y in zip(co, pu))
+    rows.append({"kind": "hbm_parity", "cell": "compress_only_zero_gp",
+                 "bitwise": same, "ok": same})
+    print(f"pack,hbm_parity,compress_only_zero_gp,bitwise={same},"
+          f"{'ok' if same else 'FAIL'}")
+    return rows
 
 
 def timing(quick: bool) -> list[dict]:
@@ -175,11 +377,18 @@ def main(quick: bool = False, json_path: str | None = None):
     rows = []
     rows += parity(quick)
     rows += launches(quick)
+    rows += hbm_table(quick)
     rows += timing(quick)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(rows, f, indent=1)
         print(f"pack,json,{json_path},written")
+    bad = [r for r in rows if r.get("ok") is False]
+    if bad:
+        raise SystemExit(
+            f"pack_bench: {len(bad)} cell(s) FAILED: "
+            f"{[r.get('cell', r['kind']) for r in bad]}"
+        )
     return rows
 
 

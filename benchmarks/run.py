@@ -66,12 +66,23 @@ def main() -> None:
         print(f"\n===== bench:{name} =====", flush=True)
         t0 = time.time()
         try:
-            fn()
+            rows = fn()
+            # sub-benchmarks report per-cell verdicts as ``ok`` fields in
+            # their returned rows; a failing smoke cell must fail the
+            # aggregate run even if the suite didn't raise
+            bad = [r for r in (rows or []) if isinstance(r, dict)
+                   and r.get("ok") is False]
+            if bad:
+                raise SystemExit(f"{len(bad)} cell(s) not ok")
             print(f"bench,{name},{(time.time() - t0) * 1e6:.0f},ok")
-        except Exception:
-            traceback.print_exc()
+        except (Exception, SystemExit) as e:
+            # SystemExit is how benches signal failed cells from main();
+            # catch it so one failing suite doesn't mask the rest, then
+            # exit non-zero below
+            if not isinstance(e, SystemExit):
+                traceback.print_exc()
             failed.append(name)
-            print(f"bench,{name},{(time.time() - t0) * 1e6:.0f},FAILED")
+            print(f"bench,{name},{(time.time() - t0) * 1e6:.0f},FAILED ({e})")
     if failed:
         sys.exit(f"FAILED suites: {failed}")
 

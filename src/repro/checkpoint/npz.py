@@ -44,9 +44,25 @@ def _flatten(tree):
 
 
 def save_state(directory: str, state, step: int) -> str:
+    """Snapshot ``state`` to ``directory/step_<step>.npz``.
+
+    Host-sync discipline: one ``jax.block_until_ready`` on the whole
+    state up front, then the per-leaf ``np.asarray`` fetches are plain
+    device->host copies of already-finished buffers. Without it the
+    first ``np.asarray`` mid-run blocked the host on whatever compute
+    was still enqueued leaf by leaf, serializing dispatch at every save
+    cadence (the same lesson as Trainer.run's metric flushing).
+
+    Donation contract (``MAvgConfig.donate``, DESIGN.md §10): pass the
+    state a step RETURNED, never one you later feed to a donated step —
+    a donated input's buffers are dead after dispatch and the fetch here
+    would raise. The Trainer saves ``self.state`` immediately after
+    rebinding it to the step's return value, which is the pattern to
+    copy.
+    """
     os.makedirs(directory, exist_ok=True)
     path = os.path.join(directory, f"step_{step:08d}.npz")
-    flat = _flatten(state)
+    flat = _flatten(jax.block_until_ready(state))
     spec = getattr(state, "spec", None)
     if spec is not None:
         flat[PACKSPEC_KEY] = np.asarray(json.dumps(spec.layout_dict()))

@@ -80,23 +80,36 @@ class QuantReducer(CompressedReducer):
         }
         return avg, (err if residual is not None else None), metrics
 
+    def _is_packed(self, delta) -> bool:
+        return (isinstance(delta, jax.Array) and delta.ndim == 3
+                and delta.shape[-1] == 128 and self.dtype in QMAX)
+
+    def _compress_packed(self, delta, step, with_err=True):
+        """(c, err, wire) of the packed (L, rows, 128) displacement plane
+        via the compress-only kernel (kernels/pack_update.pack_compress_3d):
+        same chunk geometry and dither stream as _reduce_packed's fused
+        pack_update, so the compress-only routes (gossip, masked
+        hierarchical inner) stay bitwise consistent with the fused
+        reduce — but without the zero-gp plane the old route synthesized
+        just to subtract, one full-plane HBM read fewer per mix.
+        ``with_err=False`` (the non-EF route) also drops the err-plane
+        write — a pallas_call output cannot be DCE'd, so it must not
+        exist when nobody keeps the residual."""
+        u = jax.random.uniform(
+            self._leaf_key(0, step), delta.shape, jnp.float32
+        )
+        c, err, scales = kops.pack_compress(
+            delta, u, qmax=QMAX[self.dtype], block=self.chunk_rows,
+            with_err=with_err, use_pallas=self.use_pallas,
+        )
+        wire = (delta.size * VALUE_BYTES[self.dtype]
+                + scales.size * SCALE_BYTES)
+        return c, err, wire
+
     def _compress(self, delta, step):
-        # packed (L, rows, 128) displacement plane: per-learner chunking
-        # through the same pack_update geometry/dither as _reduce_packed,
-        # so the compress-only routes (gossip, masked hierarchical inner)
-        # stay bitwise consistent with the fused reduce
-        if (isinstance(delta, jax.Array) and delta.ndim == 3
-                and delta.shape[-1] == 128 and self.dtype in QMAX):
-            u = jax.random.uniform(
-                self._leaf_key(0, step), delta.shape, jnp.float32
-            )
-            c, _err, scales = kops.pack_update(
-                delta, jnp.zeros(delta.shape[1:], delta.dtype), None, u,
-                qmax=QMAX[self.dtype], block=self.chunk_rows,
-                use_pallas=self.use_pallas,
-            )
-            wire = (delta.size * VALUE_BYTES[self.dtype]
-                    + scales.size * SCALE_BYTES)
+        if self._is_packed(delta):
+            c, _err, wire = self._compress_packed(delta, step,
+                                                  with_err=False)
             return c, wire
         leaves, treedef = jax.tree_util.tree_flatten(delta)
         out, wire = [], 0.0
@@ -108,3 +121,10 @@ class QuantReducer(CompressedReducer):
             out.append(dq)
             wire += leaf.size * VALUE_BYTES[self.dtype] + nchunks * SCALE_BYTES
         return jax.tree_util.tree_unflatten(treedef, out), wire
+
+    def _compress_residual(self, delta, step):
+        # the packed kernel computed err = delta - c in the same pass;
+        # hand it to the EF route instead of re-deriving it tree-wide
+        if self._is_packed(delta):
+            return self._compress_packed(delta, step)
+        return super()._compress_residual(delta, step)

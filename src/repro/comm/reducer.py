@@ -88,6 +88,21 @@ class CompressedReducer(Reducer):
         """delta: (L, ...) f32 pytree -> (decompressed C(delta), wire bytes)."""
         raise NotImplementedError
 
+    def _compress_residual(self, delta, step) -> tuple[Any, Any, float]:
+        """``_compress`` plus the compression error err = delta - C(delta)
+        of the same pass: (c, err, wire bytes).
+
+        The error-feedback compress-only route (gossip neighbor exchange,
+        masked hierarchical inner — topology.gossip.compress_stack) needs
+        err as the next residual; deriving it here lets reducers whose
+        kernel already computed delta - c in-register (QuantReducer on
+        the packed plane, kernels/pack_update.py) hand it over without a
+        second full-plane subtraction pass. The default is the two-pass
+        fallback and is bitwise-identical to it by contract.
+        """
+        c, wire = self._compress(delta, step)
+        return c, tree_sub(delta, c), wire
+
     def reduce(self, learners, gp, residual, *, step):
         delta = jax.tree.map(
             lambda w, g: w.astype(jnp.float32) - g.astype(jnp.float32)[None],

@@ -373,6 +373,14 @@ class MAvgConfig:
     # instead of one per leaf. False = the legacy per-leaf path, kept as
     # the parity oracle and for resuming per-leaf checkpoints.
     packed: bool = True
+    # donate the MetaState input buffers to the jitted meta step
+    # (jax.jit(donate_argnums=...)): every state plane is updated in
+    # place instead of functionally rebuilt, halving the meta phase's
+    # peak state HBM (DESIGN.md §10). Numerics are identical (aliasing
+    # only); False keeps the input state alive after a step, which the
+    # interactive/debug paths (and any caller that re-reads the
+    # pre-step state) need.
+    donate: bool = True
     # meta-communication compression (repro.comm); dense = exact average
     comm: CommConfig = field(default_factory=CommConfig)
     # meta-level mixing topology (repro.topology); flat = all-reduce

@@ -123,7 +123,14 @@ def init_state(params, cfg: MAvgConfig, reducer=None,
     if cfg.packed:
         spec = make_pack_spec(params, dtype=cfg.meta_dtype)
         params = spec.pack(params)
-    gp = tree_cast(params, cfg.meta_dtype)
+    # the state must OWN its buffers: a same-dtype astype is a no-op that
+    # aliases the caller's param arrays, and under cfg.donate the jitted
+    # step would then delete the caller's buffers with the donated state
+    # (caught by tests/test_zero_copy.py). jnp.array copies
+    # unconditionally; one extra whole-model copy, once per run.
+    gp = jax.tree.map(
+        lambda x: jnp.array(x, dtype=jnp.dtype(cfg.meta_dtype)), params
+    )
     learners = tree_broadcast_learners(
         tree_cast(gp, cfg.compute_dtype), cfg.num_learners
     )
@@ -385,3 +392,34 @@ def make_meta_step(loss_fn: LossFn, cfg: MAvgConfig, reducer=None,
 
         topology = make_topology(cfg, reducer)
     return partial(meta_step, loss_fn=loss_fn, cfg=cfg, topology=topology)
+
+
+# position of the MetaState argument in every ``step(state, batches, ...)``
+# signature this repo jits — the single constant Trainer / launch/specs.py
+# thread into jax.jit(donate_argnums=...)
+STATE_ARGNUM = 0
+
+
+def make_jit_meta_step(loss_fn: LossFn, cfg: MAvgConfig, reducer=None,
+                       topology=None, *, donate=None, **jit_kwargs):
+    """``make_meta_step`` wrapped in ``jax.jit`` with MetaState donation.
+
+    Under ``cfg.donate`` (override with ``donate=``) the input state is
+    donated to the step: XLA aliases every (rows, 128) plane of the input
+    MetaState to the corresponding output plane and updates it in place,
+    so the meta phase holds ONE copy of the state live instead of two —
+    peak meta-phase HBM at the 405B packed config drops ~2x (DESIGN.md
+    §10, measured in benchmarks/pack_bench.py). Numerics are unchanged:
+    donation is pure buffer aliasing.
+
+    The contract the caller signs: the state passed in is DEAD after the
+    call (jax raises on re-use). Work off the returned state only —
+    metrics, checkpointing, resume (core/trainer.py is the reference
+    consumer). Extra ``jit_kwargs`` (in_shardings/out_shardings from
+    launch/specs.py) pass through; the state's in_shardings must equal
+    its out_shardings or XLA cannot alias the donated buffers.
+    """
+    step_fn = make_meta_step(loss_fn, cfg, reducer, topology)
+    if cfg.donate if donate is None else donate:
+        jit_kwargs.setdefault("donate_argnums", (STATE_ARGNUM,))
+    return jax.jit(step_fn, **jit_kwargs)

@@ -46,10 +46,19 @@ class Trainer:
         def jit_step(state, batches, lr):
             return step_fn(state, batches, lr=lr)
 
-        kwargs = {}
-        if mesh is not None and state_shardings is not None:
-            kwargs = dict(in_shardings=(state_shardings, None, None),
-                          out_shardings=(state_shardings, None))
+        # donation + the state in==out sharding pairing come from the one
+        # assembly point every launcher uses (launch/specs.py): under
+        # mcfg.donate the input MetaState is donated to the step and
+        # updated in place (zero-copy meta phase, DESIGN.md §10);
+        # everything below (run/metrics/checkpoints/restore) works off
+        # the returned state only, never a pre-step one
+        from repro.launch.specs import meta_step_jit_kwargs
+
+        kwargs = meta_step_jit_kwargs(
+            self.mcfg,
+            state_shardings if mesh is not None else None,
+            n_extra_args=2,
+        )
         self._step = jax.jit(jit_step, **kwargs)
         self.history: list[dict] = []
 
@@ -61,6 +70,17 @@ class Trainer:
         on device completion and serializes dispatch, so the in-between
         steps are enqueued back-to-back and only the boundary step pays
         the sync. ``history`` still holds plain float dicts afterwards.
+
+        Donation contract (``MAvgConfig.donate``): the state handed to
+        ``self._step`` is dead the moment the call is dispatched — its
+        planes are aliased into the returned state's. Everything in this
+        loop therefore works off the RETURNED state: the step counter is
+        read once before any dispatch, metrics are step outputs, the
+        checkpoint cadence is host arithmetic on python ints, and
+        ``save_state`` snapshots the state a step returned (never an
+        input that a later dispatch may have consumed). ``self.state``
+        always rebinds to the live returned state, so ``restore``/resume
+        and post-run eval see valid buffers.
         """
         n = meta_steps if meta_steps is not None else self.cfg.meta_steps
         t0 = time.time()

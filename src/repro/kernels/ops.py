@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import block_momentum as _bm
 from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_meta as _fm
 from repro.kernels import local_sgd as _sgd
 from repro.kernels import neighbor_mix as _nm
 from repro.kernels import pack_update as _pu
@@ -54,6 +55,18 @@ def _from_2d(x2, shape, n):
     return x2.reshape(-1)[:n].reshape(shape)
 
 
+def is_packed_plane(x) -> bool:
+    """Is ``x`` one lane-aligned (rows, 128) plane — the packed flat
+    meta-plane layout every kernel here takes (repro.pack)? The single
+    dispatch predicate: ops' fast paths skip the reshape/pad round trip
+    on it, and repro.topology routes packed states through the fused
+    kernels with it (the shape check, not just the type, keeps bare-array
+    param pytrees that don't carry the wire layout on the generic
+    per-leaf path)."""
+    return (isinstance(x, jax.Array) and x.ndim == 2
+            and x.shape[1] == LANES and x.shape[0] % 8 == 0)
+
+
 # ---------------------------------------------------------------------------
 # block momentum
 # ---------------------------------------------------------------------------
@@ -62,6 +75,10 @@ def _from_2d(x2, shape, n):
 def block_momentum(w, v, a, *, mu, eta=1.0, nesterov=False, interpret=None):
     """Fused meta update on one array. Returns (w', v')."""
     interpret = _default_interpret() if interpret is None else interpret
+    if is_packed_plane(w):  # packed meta plane: feed the kernel directly
+        return _bm.block_momentum_2d(
+            w, v, a, mu, eta, nesterov=nesterov, interpret=interpret
+        )
     rows, pad = _layout(w.size)  # w/v/a are same-shaped: one layout
     w2, v2, a2 = (_to_2d_as(t, rows, pad) for t in (w, v, a))
     w2n, v2n = _bm.block_momentum_2d(
@@ -147,6 +164,8 @@ def neighbor_mix_tree(tree, w, *, use_pallas=True, interpret=None, step=None):
 
 def sgd_apply(w, g, lr, *, interpret=None):
     interpret = _default_interpret() if interpret is None else interpret
+    if is_packed_plane(w):  # packed meta plane: feed the kernel directly
+        return _sgd.sgd_apply_2d(w, g, lr, interpret=interpret)
     rows, pad = _layout(w.size)  # w/g are same-shaped: one layout
     out = _sgd.sgd_apply_2d(
         _to_2d_as(w, rows, pad), _to_2d_as(g, rows, pad), lr,
@@ -227,6 +246,59 @@ def pack_update(w, g, e, u, *, qmax=127, block=None, use_pallas=True,
         return _pu.pack_update_3d(w, g, e, u, qmax=qmax, block=b,
                                   interpret=interpret)
     return _ref.pack_update_ref(w, g, e, u, qmax, b)
+
+
+def pack_compress(d, u, *, qmax=127, block=None, with_err=True,
+                  use_pallas=True, interpret=None):
+    """Compress-only variant of ``pack_update`` for an already-formed
+    (L, rows, 128) displacement plane — the gossip / masked-hierarchical
+    compress-stage path. Skips the gp-plane read (the caller had to
+    synthesize zeros just to satisfy pack_update's signature), and under
+    ``with_err=False`` (no error feedback: nobody reads the residual)
+    also skips the err-plane write: 2R+3W or 2R+2W instead of 3R+3W,
+    bitwise-identical outputs.
+
+    Returns (c, err, scales) — ``err`` is the EF residual computed in the
+    same pass (delta - c), so the error-feedback route needs no extra
+    subtraction pass either; None when ``with_err`` is off.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    L, rows, lanes = d.shape
+    b = _q.choose_block(rows, block)
+    if use_pallas:
+        return _pu.pack_compress_3d(d, u, qmax=qmax, block=b,
+                                    with_err=with_err, interpret=interpret)
+    return _ref.pack_compress_ref(d, u, qmax, b, with_err=with_err)
+
+
+# ---------------------------------------------------------------------------
+# fused momentum -> learner broadcast (repro.pack meta step)
+# ---------------------------------------------------------------------------
+
+
+def fused_momentum_broadcast(w, v, a, *, mu, eta=1.0, num_learners,
+                             ldtype=None, nesterov=False, use_pallas=True,
+                             interpret=None):
+    """Block momentum + learner reset on the packed (rows, 128) meta
+    plane in one HBM pass: v' = mu v + eta (a - w); w' = w + v'; and the
+    (L, rows, 128) learner plane w'.astype(ldtype) emitted directly from
+    the update's VMEM tile (kernels/fused_meta.py) — eliminating
+    tree_broadcast_learners' re-read of the meta params.
+
+    Returns (w', v', learners). Bit-identical to block_momentum followed
+    by astype + broadcast (the jnp oracle shares the op order).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    assert is_packed_plane(w), w.shape
+    ldtype = w.dtype if ldtype is None else ldtype
+    if use_pallas:
+        return _fm.fused_momentum_broadcast_2d(
+            w, v, a, mu, eta, num_learners, ldtype, nesterov=nesterov,
+            interpret=interpret,
+        )
+    return _ref.fused_momentum_broadcast_ref(
+        w, v, a, mu, eta, num_learners, ldtype, nesterov=nesterov
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -101,3 +101,68 @@ def pack_update_3d(w, g, e, u, *, qmax: int = 127, block: int | None = None,
         interpret=interpret,
     )(*args)
     return c, err, scales
+
+
+# ---------------------------------------------------------------------------
+# compress-only variant (the gossip / masked-hierarchical-inner path)
+# ---------------------------------------------------------------------------
+
+
+def _compress_kernel(d_ref, u_ref, *out, qmax: int, with_err: bool):
+    if with_err:
+        c_ref, err_ref, s_ref = out
+    else:
+        c_ref, s_ref = out
+    d = d_ref[...].astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(d)), EPS) / qmax
+    s_ref[0, 0] = scale
+    q = jnp.clip(jnp.floor(d / scale + u_ref[...]), -qmax, qmax)
+    c = q * scale
+    c_ref[...] = c
+    if with_err:
+        err_ref[...] = d - c
+
+
+def pack_compress_3d(d, u, *, qmax: int = 127, block: int | None = None,
+                     with_err: bool = True, interpret: bool = False):
+    """Quantize an already-formed (L, rows, 128) displacement plane.
+
+    The compress-stage routes (gossip neighbor exchange, the masked
+    hierarchical inner average — topology.gossip.compress_stack) hand the
+    reducer a displacement delta_j = w_j - x_j they computed themselves;
+    running those through pack_update_3d meant synthesizing a zero gp
+    plane just so the kernel could subtract it — one full-plane HBM read
+    of zeros per mix. This variant reads (d, u) and writes (c, scales)
+    plus, under ``with_err``, the EF residual err = d - c the same pass
+    already computed: 2R + 3W (error feedback, which keeps err as the
+    next residual) or 2R + 2W (no EF — an output of an opaque
+    pallas_call cannot be DCE'd by XLA, so the err plane must not exist
+    at all when nobody reads it) instead of pack_update's 3R + 3W.
+
+    Bitwise-identical to ``pack_update_3d(d, zeros, None, u)`` (d - 0 is
+    exact), same chunk geometry and dither contract — so the fused-reduce
+    vs compress-only consistency invariants (DESIGN.md §9) survive, now
+    pinned in tests/test_zero_copy.py. Returns (c, err, scales) with
+    err=None when ``with_err`` is off.
+    """
+    L, rows, lanes = d.shape
+    assert lanes == LANES and rows % 8 == 0, d.shape
+    b = min(BLOCK_ROWS if block is None else block, rows)
+    assert rows % b == 0, (rows, b)
+    grid = (L, rows // b)
+    spec = pl.BlockSpec((1, b, LANES), lambda l, i: (l, i, 0))
+    s_spec = pl.BlockSpec((1, 1), lambda l, i: (l, i))
+    plane = jax.ShapeDtypeStruct(d.shape, jnp.float32)
+    scales = jax.ShapeDtypeStruct((L, rows // b), jnp.float32)
+    out = pl.pallas_call(
+        functools.partial(_compress_kernel, qmax=qmax, with_err=with_err),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec, spec, s_spec] if with_err else [spec, s_spec],
+        out_shape=[plane, plane, scales] if with_err else [plane, scales],
+        interpret=interpret,
+    )(d, u)
+    if with_err:
+        return out
+    c, s = out
+    return c, None, s

@@ -23,6 +23,22 @@ def sgd_apply_ref(w, g, lr):
     return (w.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(w.dtype)
 
 
+def fused_momentum_broadcast_ref(w, v, a, mu, eta, num_learners: int, ldtype,
+                                 *, nesterov: bool = False):
+    """Oracle of fused_meta.fused_momentum_broadcast_2d: the block-momentum
+    update followed by the learner-dtype broadcast of the new meta params.
+
+    Exactly block_momentum_ref + astype + broadcast in that op order, so
+    the fused path is bit-identical to the unfused two-step path
+    (block_momentum then tree_broadcast_learners) it replaces.
+    """
+    w_new, v_new = block_momentum_ref(w, v, a, mu, eta, nesterov=nesterov)
+    learners = jnp.broadcast_to(
+        w_new.astype(ldtype)[None], (num_learners,) + w_new.shape
+    )
+    return w_new, v_new, learners
+
+
 def quantize_ref(x, u, qmax: int, block: int):
     """Oracle of quantize.quantize_2d: x, u (rows, 128); per-chunk scales.
 
@@ -77,6 +93,23 @@ def pack_update_ref(w, g, e, u, qmax: int, block: int):
     q = jnp.clip(jnp.floor(d / s_full + u), -qmax, qmax)
     c = q * s_full
     return c, d - c, scales
+
+
+def pack_compress_ref(d, u, qmax: int, block: int, with_err: bool = True):
+    """Oracle of pack_update.pack_compress_3d: quantize an already-formed
+    (L, rows, 128) displacement plane — pack_update_ref without the gp
+    subtraction (d - 0 is exact, so the two agree bitwise on a zero gp).
+    Returns (c, err, scales); err is None when ``with_err`` is off (the
+    non-EF route, where the kernel never writes the err plane)."""
+    L, rows, lanes = d.shape
+    d = d.astype(jnp.float32)
+    nchunks = rows // block
+    db = d.reshape(L, nchunks, block * lanes)
+    scales = jnp.maximum(jnp.abs(db).max(axis=2), 1e-12) / qmax  # (L, nchunks)
+    s_full = jnp.repeat(scales, block, axis=1).reshape(L, rows, 1)
+    q = jnp.clip(jnp.floor(d / s_full + u), -qmax, qmax)
+    c = q * s_full
+    return c, (d - c if with_err else None), scales
 
 
 def neighbor_mix_ref(x, w):

@@ -96,10 +96,13 @@ def build_train(cfg: ModelConfig, mesh, shape: InputShape, *,
     else:
         batch_spec = P(lax_spec)
     batch_sh = {name: NamedSharding(mesh, batch_spec) for name in batch_sds}
-    fn = jax.jit(
-        train_step, in_shardings=(state_sh, batch_sh),
-        out_shardings=(state_sh, None),
-    )
+    # donation + the shared state in/out sharding come from one assembly
+    # point (S.meta_step_jit_kwargs): under mcfg.donate the lowered train
+    # program aliases the input state planes onto the output state —
+    # the dry-run HLO's peak meta-state memory is 1x the live state, not 2x
+    kwargs = S.meta_step_jit_kwargs(mcfg, state_sh, n_extra_args=1)
+    kwargs["in_shardings"] = (state_sh, batch_sh)
+    fn = jax.jit(train_step, **kwargs)
     return fn, (state_sds, batch_sds), mcfg
 
 

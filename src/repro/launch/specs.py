@@ -91,6 +91,41 @@ def _batch_axes(mesh, batch: int):
 
 
 # ---------------------------------------------------------------------------
+# meta-step jit assembly (donation + shardings)
+# ---------------------------------------------------------------------------
+
+
+def meta_step_jit_kwargs(mcfg: MAvgConfig, state_shardings=None,
+                         n_extra_args: int = 2) -> dict:
+    """jax.jit kwargs for a ``step(state, batches, ...)`` meta step.
+
+    One assembly point so every launcher agrees on the two coupled
+    choices (DESIGN.md §10):
+
+    * ``donate_argnums=(STATE_ARGNUM,)`` under ``mcfg.donate`` — the
+      input MetaState's planes are aliased onto the output state's and
+      updated in place, halving the meta phase's peak state HBM;
+    * the state's in_shardings are the SAME object as its out_shardings.
+      XLA only aliases a donated buffer whose input layout matches the
+      output it is donated to, so a donated state must enter and leave
+      the step under one sharding. (It also keeps the loop-carried
+      layout stable across steps, donation or not.)
+
+    ``n_extra_args`` counts the non-state positional args (batches, lr)
+    which stay unsharded/unconstrained.
+    """
+    from repro.core.meta import STATE_ARGNUM
+
+    kwargs = {}
+    if state_shardings is not None:
+        kwargs["in_shardings"] = (state_shardings,) + (None,) * n_extra_args
+        kwargs["out_shardings"] = (state_shardings, None)
+    if mcfg.donate:
+        kwargs["donate_argnums"] = (STATE_ARGNUM,)
+    return kwargs
+
+
+# ---------------------------------------------------------------------------
 # state shardings (train)
 # ---------------------------------------------------------------------------
 

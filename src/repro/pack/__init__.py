@@ -87,6 +87,14 @@ class PackSpec:
         """Padded element count of the packed buffer."""
         return self.rows * LANES
 
+    def plane_bytes(self, dtype=None) -> int:
+        """Bytes of ONE (rows, 128) plane at ``dtype`` (default: the
+        buffer dtype) — the unit the meta-phase HBM budget model counts
+        in (DESIGN.md §10; learner/group stacks are L or G planes)."""
+        return self.total * jnp.dtype(
+            self.dtype if dtype is None else dtype
+        ).itemsize
+
     @property
     def pad_waste(self) -> int:
         """Padded-but-unused elements of the packed layout (alignment

@@ -351,3 +351,60 @@ def hlo_cost(hlo: str) -> HloCost:
     walk_bytes(entry, 1.0)
     total_flops = sum(by_comp.values())
     return HloCost(total_flops, total_bytes[0], by_comp)
+
+
+# ---------------------------------------------------------------------------
+# dry-run cost of a jitted function (AOT: no device allocation)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class JitCost:
+    """Compiled-program cost of one jitted function.
+
+    hbm_bytes        trip-count-weighted HBM traffic of the optimized HLO
+                     (the hlo_cost model above)
+    flops            same walk, dot/conv FLOPs
+    arg_bytes        total input buffer bytes
+    out_bytes        total output buffer bytes
+    alias_bytes      bytes of inputs aliased onto outputs (buffer
+                     donation — jax.jit(donate_argnums=...)); these
+                     buffers are counted once, not twice
+    temp_bytes       compiler temp allocation
+    peak_state_bytes arg + out + temp - alias: the peak live footprint of
+                     the program's own buffers, the number donation
+                     halves for a state -> state step (DESIGN.md §10)
+    """
+
+    hbm_bytes: float
+    flops: float
+    arg_bytes: int
+    out_bytes: int
+    alias_bytes: int
+    temp_bytes: int
+
+    @property
+    def peak_state_bytes(self) -> int:
+        return (self.arg_bytes + self.out_bytes + self.temp_bytes
+                - self.alias_bytes)
+
+
+def jit_cost(fn, *abstract_args, **jit_kwargs) -> JitCost:
+    """Lower + compile ``fn`` on abstract ShapeDtypeStruct args and read
+    the costs off the compiled artifact — nothing is allocated or run, so
+    this works at full 405B scale on the CPU container (the dry-run
+    move). ``jit_kwargs`` pass to jax.jit; ``donate_argnums`` is how the
+    donated-vs-functional peak-memory comparison is produced."""
+    import jax
+
+    compiled = jax.jit(fn, **jit_kwargs).lower(*abstract_args).compile()
+    cost = hlo_cost(compiled.as_text())
+    mem = compiled.memory_analysis()
+    return JitCost(
+        hbm_bytes=cost.bytes,
+        flops=cost.flops,
+        arg_bytes=int(mem.argument_size_in_bytes),
+        out_bytes=int(mem.output_size_in_bytes),
+        alias_bytes=int(mem.alias_size_in_bytes),
+        temp_bytes=int(mem.temp_size_in_bytes),
+    )

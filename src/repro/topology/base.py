@@ -28,6 +28,9 @@ from typing import Any
 import jax
 
 from repro.configs.base import MAvgConfig
+# the packed-plane dispatch predicate lives with the kernels it routes to
+# (same layout constants) — re-exported here for the topologies
+from repro.kernels.ops import is_packed_plane
 from repro.utils import (
     tree_broadcast_learners,
     tree_cast,
@@ -70,6 +73,28 @@ def block_momentum_update(gp, v, avg, *, mu, eta=1.0, nesterov=False,
 
 def learner_dtype(learners):
     return jax.tree.leaves(learners)[0].dtype
+
+
+
+
+def fused_momentum_broadcast_update(gp, v, avg, *, mu, eta, num_learners,
+                                    ldtype, nesterov=False,
+                                    use_pallas=False):
+    """The packed meta plane's whole meta update in one pass: block
+    momentum + the (L, rows, 128) learner-reset broadcast emitted
+    directly from the update (kernels/fused_meta.py) instead of
+    re-reading w~' through tree_broadcast_learners — one full-plane HBM
+    read fewer per meta step (DESIGN.md §10). Bit-identical to
+    ``block_momentum_update`` followed by cast + broadcast.
+
+    Returns (gp', v', learners).
+    """
+    from repro.kernels import ops as kops
+
+    return kops.fused_momentum_broadcast(
+        gp, v, avg, mu=mu, eta=eta, num_learners=num_learners,
+        ldtype=ldtype, nesterov=nesterov, use_pallas=use_pallas,
+    )
 
 
 class Topology:
@@ -122,13 +147,22 @@ class FlatAllReduce(Topology):
             learners, gp, comm_residual, step=step
         )
         avg = tree_cast(avg, cfg.meta_dtype)
-        gp_new, v = block_momentum_update(
-            gp, v, avg, mu=self.mu, eta=cfg.meta_lr, nesterov=cfg.nesterov,
-            use_pallas=cfg.use_pallas,
-        )
-        learners = tree_broadcast_learners(
-            tree_cast(gp_new, learner_dtype(learners)), cfg.num_learners
-        )
+        if is_packed_plane(gp):
+            # packed meta plane: momentum + learner reset in one pass
+            gp_new, v, learners = fused_momentum_broadcast_update(
+                gp, v, avg, mu=self.mu, eta=cfg.meta_lr,
+                num_learners=cfg.num_learners,
+                ldtype=learner_dtype(learners), nesterov=cfg.nesterov,
+                use_pallas=cfg.use_pallas,
+            )
+        else:
+            gp_new, v = block_momentum_update(
+                gp, v, avg, mu=self.mu, eta=cfg.meta_lr,
+                nesterov=cfg.nesterov, use_pallas=cfg.use_pallas,
+            )
+            learners = tree_broadcast_learners(
+                tree_cast(gp_new, learner_dtype(learners)), cfg.num_learners
+            )
         metrics = {
             "v_norm": tree_norm(v),
             "displacement_norm": tree_norm(tree_sub(avg, gp)),

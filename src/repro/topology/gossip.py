@@ -176,8 +176,12 @@ def compress_stack(reducer, delta, residual, *, step, learners):
                 "residual in MetaState.topo)."
             )
         delta = tree_add(delta, residual)
-        c, wire = reducer.inner._compress(delta, step)
-        return c, tree_sub(delta, c), wire
+        # _compress_residual returns the compression error of the same
+        # pass (on the packed plane: computed in-register by the
+        # compress-only kernel) — bitwise what tree_sub(delta, c) gives,
+        # without another full-plane subtraction
+        c, err, wire = reducer.inner._compress_residual(delta, step)
+        return c, err, wire
     if isinstance(reducer, CompressedReducer):
         c, wire = reducer._compress(delta, step)
         return c, residual, wire

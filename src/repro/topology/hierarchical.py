@@ -43,6 +43,8 @@ from repro.topology.base import (
     Topology,
     block_momentum_update,
     effective_momentum,
+    fused_momentum_broadcast_update,
+    is_packed_plane,
     learner_dtype,
 )
 from repro.topology.elastic import (
@@ -223,13 +225,25 @@ class Hierarchical(Topology):
                 gparams_inner, gp, topo["outer_residual"], step=step
             )
             A = tree_cast(A, cfg.meta_dtype)
-            gp_out, v_out = block_momentum_update(
-                gp, v, A, mu=self.mu_out, eta=1.0, nesterov=False,
-                use_pallas=cfg.use_pallas,
-            )
-            gpar = jax.tree.map(
-                lambda x: jnp.broadcast_to(x[None], (G,) + x.shape), gp_out
-            )
+            if is_packed_plane(gp):
+                # packed meta plane: the outer momentum update emits the
+                # (G, rows, 128) group-reset broadcast in the same pass
+                # (the groups are the outer level's "learners"; the group
+                # plane stays in the meta dtype)
+                gp_out, v_out, gpar = fused_momentum_broadcast_update(
+                    gp, v, A, mu=self.mu_out, eta=1.0, num_learners=G,
+                    ldtype=jnp.dtype(cfg.meta_dtype), nesterov=False,
+                    use_pallas=cfg.use_pallas,
+                )
+            else:
+                gp_out, v_out = block_momentum_update(
+                    gp, v, A, mu=self.mu_out, eta=1.0, nesterov=False,
+                    use_pallas=cfg.use_pallas,
+                )
+                gpar = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x[None], (G,) + x.shape),
+                    gp_out,
+                )
             # bytes are static python floats inside the trace; lift them so
             # both branches return the same pytree. The dense yardstick is
             # gated on do_outer exactly like the wire bytes: on hold steps
