@@ -62,6 +62,31 @@ def samples_to_target(losses, target: float, P: int, K: int, batch: int):
     return None
 
 
+def write_rows(path: str, rows: list, suite: str) -> str:
+    """The one ``--json PATH`` writer every bench shares.
+
+    Emits the ``repro.obs`` run-log envelope (DESIGN.md §11): a
+    ``{"kind": "manifest", ...}`` first line carrying the suite name plus
+    the jax/device environment, then one ``{"kind": "row", ...}`` line
+    per result row — the same JSONL stream format Trainer run logs use,
+    so one reader (and ``tools/check_telemetry.py``) covers both.
+    """
+    from repro.obs import JsonlSink, run_manifest
+
+    sink = JsonlSink(path)
+    sink.open_run(run_manifest(suite=suite))
+    for r in rows:
+        rec = dict(r)
+        # benches use "kind" for their own row taxonomy (parity /
+        # hbm_passes / ...); the envelope tag must stay "row", so the
+        # bench taxonomy moves to "row_kind"
+        if "kind" in rec:
+            rec["row_kind"] = rec.pop("kind")
+        sink.append({"kind": "row", **rec})
+    sink.close()
+    return path
+
+
 def timeit(fn, *args, iters: int = 10, warmup: int = 2):
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))

@@ -23,7 +23,6 @@ CI artifact. ``--smoke`` shrinks steps for CI.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 
@@ -182,8 +181,9 @@ def modeled(arch: str = "qwen3-1.7b", num_learners: int = P) -> list[dict]:
 def main(quick: bool = False, json_path: str | None = None) -> list[dict]:
     rows = measured_churn(quick) + measured_hetero_k(quick) + modeled()
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(rows, f, indent=2)
+        from benchmarks.common import write_rows
+
+        write_rows(json_path, rows, suite="elastic_bench")
         print(f"wrote {len(rows)} rows to {json_path}")
     return rows
 

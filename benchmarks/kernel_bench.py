@@ -17,7 +17,6 @@ artifact shape shared with comm/topology/elastic/pack benches).
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 
@@ -181,8 +180,9 @@ def main(quick: bool = False, json_path: str | None = None):
     assert err < 5e-3
 
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(rows, f, indent=1)
+        from benchmarks.common import write_rows
+
+        write_rows(json_path, rows, suite="kernel_bench")
         print(f"kernel,json,{json_path},written")
     return rows
 

@@ -37,7 +37,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses as dc
-import json
 import os
 import sys
 
@@ -380,8 +379,9 @@ def main(quick: bool = False, json_path: str | None = None):
     rows += hbm_table(quick)
     rows += timing(quick)
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(rows, f, indent=1)
+        from benchmarks.common import write_rows
+
+        write_rows(json_path, rows, suite="pack_bench")
         print(f"pack,json,{json_path},written")
     bad = [r for r in rows if r.get("ok") is False]
     if bad:

@@ -20,7 +20,6 @@ row as JSON (the CI artifact, so the bench trajectory accumulates).
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 
@@ -110,8 +109,9 @@ def modeled(arch: str = "qwen3-1.7b", num_learners: int = P) -> list[dict]:
 def main(quick: bool = False, json_path: str | None = None) -> list[dict]:
     rows = measured(quick) + modeled()
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(rows, f, indent=2)
+        from benchmarks.common import write_rows
+
+        write_rows(json_path, rows, suite="topology_bench")
         print(f"wrote {len(rows)} rows to {json_path}")
     return rows
 

@@ -43,8 +43,14 @@ def _flatten(tree):
     return flat
 
 
-def save_state(directory: str, state, step: int) -> str:
+def save_state(directory: str, state, step: int, manifest=None) -> str:
     """Snapshot ``state`` to ``directory/step_<step>.npz``.
+
+    ``manifest`` (optional): a ``repro.obs.run_manifest`` dict written to
+    ``directory/manifest.json`` alongside the snapshots, so a checkpoint
+    directory is self-describing — the config / topology / packspec-hash
+    needed to resume it travels with it (DESIGN.md §11). Rewritten on
+    every save (cheap, and a resumed run refreshes the environment info).
 
     Host-sync discipline: one ``jax.block_until_ready`` on the whole
     state up front, then the per-leaf ``np.asarray`` fetches are plain
@@ -67,6 +73,9 @@ def save_state(directory: str, state, step: int) -> str:
     if spec is not None:
         flat[PACKSPEC_KEY] = np.asarray(json.dumps(spec.layout_dict()))
     np.savez(path, **flat)
+    if manifest is not None:
+        with open(os.path.join(directory, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=2, sort_keys=True, default=str)
     return path
 
 

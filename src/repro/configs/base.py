@@ -413,6 +413,54 @@ class MAvgConfig:
             )
 
 
+# sink kinds of the repro.obs subsystem (DESIGN.md §11) — the single
+# source the CLI choices derive from
+OBS_SINKS = ("none", "jsonl", "csv", "memory")
+
+
+@dataclass(frozen=True)
+class ObsConfig:
+    """Telemetry knobs (the ``repro.obs`` subsystem, DESIGN.md §11).
+
+    sink             none | jsonl | csv | memory — where flushed metric
+                     records and the run manifest go. Metrics stay on
+                     device between ``log_every`` boundaries regardless
+                     (the MetricsBuffer ring); the sink only sees already-
+                     flushed host floats, so enabling it adds no syncs.
+    run_dir          directory of the run log (run.jsonl / run.csv) and
+                     trace exports; required for the file sinks
+    buffer_capacity  rows of the device metric ring (0 -> sized to
+                     max(log_every, 1), the flush cadence)
+    trace            phase span timers (dispatch / host_flush /
+                     checkpoint_io / sink) + Chrome-trace export to
+                     ``run_dir/trace.json`` at the end of each run
+    profiler         capture a jax.profiler device trace of the run into
+                     ``run_dir/jax_trace`` (best-effort; needs profiler
+                     support in the jax build)
+    cost_analysis    record the compiled meta step's measured HBM /
+                     peak-state / flops numbers (roofline.hlo_cost
+                     .jit_cost) into the run manifest — one extra AOT
+                     compile of the step at first dispatch
+    """
+
+    sink: str = "none"
+    run_dir: Optional[str] = None
+    buffer_capacity: int = 0
+    trace: bool = False
+    profiler: bool = False
+    cost_analysis: bool = False
+
+    def __post_init__(self):
+        assert self.sink in OBS_SINKS, (
+            f"unknown obs sink {self.sink!r}; choose from {OBS_SINKS}"
+        )
+        assert self.buffer_capacity >= 0, self.buffer_capacity
+        if self.sink in ("jsonl", "csv") and self.run_dir is None:
+            raise ValueError(
+                f"ObsConfig(sink={self.sink!r}) needs run_dir for the run log"
+            )
+
+
 @dataclass(frozen=True)
 class TrainConfig:
     model: ModelConfig
@@ -424,6 +472,9 @@ class TrainConfig:
     log_every: int = 1
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0
+    # telemetry (repro.obs): sink/tracing knobs; the device metric ring is
+    # always on (it IS the metrics path), the knobs decide where it lands
+    obs: ObsConfig = field(default_factory=ObsConfig)
 
 
 def to_dict(cfg) -> dict:

@@ -187,7 +187,11 @@ def _local_phase(loss_fn: LossFn, learners, local_mom, batches, cfg: MAvgConfig,
     is repacked once after the scan. Leaves stay in the learner plane's
     compute dtype through the round trip.
 
-    Returns (new learners, new local momentum, mean loss, mean grad-norm).
+    Returns (new learners, new local momentum, mean loss, mean grad-norm,
+    per-learner mean loss (L,)) — the per-learner vector feeds the
+    ``loss_spread`` telemetry metric (repro.obs): data-heterogeneity and
+    straggler divergence show up as spread before they show up in the
+    mean.
     """
     if spec is not None:
         ldt = _ldtype(learners)
@@ -254,15 +258,33 @@ def _local_phase(loss_fn: LossFn, learners, local_mom, batches, cfg: MAvgConfig,
 
     mom_in = tree_zeros_like(learners) if local_mom is None else local_mom
     if steps is None:
-        w, mom, loss, gnorm = jax.vmap(one_learner)(learners, mom_in, batches)
-        loss, gnorm = loss.mean(), gnorm.mean()
+        w, mom, loss_l, gnorm = jax.vmap(one_learner)(learners, mom_in, batches)
+        loss, gnorm = loss_l.mean(), gnorm.mean()
     else:
         w, mom, lsum, gsum, asum = jax.vmap(one_learner_masked)(
             learners, mom_in, batches, steps
         )
         denom = jnp.maximum(asum.sum(), 1.0)
         loss, gnorm = lsum.sum() / denom, gsum.sum() / denom
-    return w, (mom if local_mom is not None else None), loss, gnorm
+        # per-learner mean over that learner's ACTIVE steps; an absent
+        # learner (0 active steps) reports 0 and is masked out of the
+        # spread metric by the caller via the active counts
+        loss_l = lsum / jnp.maximum(asum, 1.0)
+    active = None if steps is None else (asum > 0)
+    return (w, (mom if local_mom is not None else None), loss, gnorm,
+            loss_l, active)
+
+
+def _loss_spread(loss_l, active):
+    """max - min of the per-learner mean losses, over ACTIVE learners only
+    (elastic membership: an absent learner ran 0 steps and reports no
+    loss). 0 when fewer than one learner is active. The telemetry signal
+    for data heterogeneity / straggler divergence (repro.obs)."""
+    if active is None:
+        return jnp.max(loss_l) - jnp.min(loss_l)
+    hi = jnp.max(jnp.where(active, loss_l, -jnp.inf))
+    lo = jnp.min(jnp.where(active, loss_l, jnp.inf))
+    return jnp.where(jnp.any(active), hi - lo, 0.0)
 
 
 # ---------------------------------------------------------------------------
@@ -293,19 +315,25 @@ def meta_step(state: MetaState, batches, *, loss_fn: LossFn, cfg: MAvgConfig,
         topology.local_steps(state.topo, state.step)
         if algo in AVERAGING_ALGOS else None
     )
-    learners, local_mom, loss, gnorm = _local_phase(
-        loss_fn, state.learners, state.local_momentum, batches, cfg, lr,
-        steps=steps, spec=state.spec,
-    )
+    with jax.named_scope("obs.local_phase"):
+        learners, local_mom, loss, gnorm, loss_l, active = _local_phase(
+            loss_fn, state.learners, state.local_momentum, batches, cfg, lr,
+            steps=steps, spec=state.spec,
+        )
     gp, v = state.global_params, state.momentum
     comm_res = state.comm_residual
     topo = state.topo
-    metrics = {"loss": loss, "grad_norm": gnorm}
+    metrics = {
+        "loss": loss,
+        "grad_norm": gnorm,
+        "loss_spread": _loss_spread(loss_l, active),
+    }
 
     if algo in AVERAGING_ALGOS:
-        gp, v, learners, comm_res, topo, topo_metrics = topology.mix(
-            learners, gp, v, comm_res, topo, step=state.step
-        )
+        with jax.named_scope("obs.meta_mix"):
+            gp, v, learners, comm_res, topo, topo_metrics = topology.mix(
+                learners, gp, v, comm_res, topo, step=state.step
+            )
         metrics.update(topo_metrics)
         if state.spec is not None:
             # reducers see the packed plane and model their value bytes

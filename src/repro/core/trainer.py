@@ -1,13 +1,22 @@
 """High-level training driver tying together model, data, meta-optimizer,
-checkpointing and (optionally) a device mesh.
+telemetry, checkpointing and (optionally) a device mesh.
 
 On a real cluster the same Trainer runs under the production mesh from
 ``repro.launch.mesh`` (the learner axis sharded over data/pod axes); on CPU
 it runs the identical jitted program on one device — the SPMD program is
 the same, which is what the multi-pod dry-run proves.
+
+Telemetry (``repro.obs``, DESIGN.md §11): every per-step scalar the meta
+step emits is written into an on-device MetricsBuffer ring *inside* the
+jitted step, so the host never touches a metric between ``log_every``
+boundaries — one bulk ``device_get`` per flush window is the only sync.
+Flushed records (plus host-side wall-clock throughput) land in
+``self.history`` and, when ``TrainConfig.obs`` selects a sink, in a
+structured run log under a per-run manifest.
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable, Optional
 
@@ -17,6 +26,19 @@ import jax.numpy as jnp
 from repro.checkpoint import load_state, save_state
 from repro.configs.base import MAvgConfig, TrainConfig
 from repro.core.meta import init_state, make_meta_step
+from repro.obs import (
+    MetricsBuffer,
+    Tracer,
+    make_sink,
+    metric_keys,
+    run_manifest,
+    write_row,
+)
+
+# argnum of the MetricsBuffer ring in the fused ``step(state, batches, lr,
+# mbuf, mrow)`` signature — donated unconditionally (the caller never
+# re-reads a pre-step ring; see launch/specs.py donate_extra)
+_RING_ARGNUM = 3
 
 
 class Trainer:
@@ -32,74 +54,162 @@ class Trainer:
     ):
         self.cfg = train_cfg
         self.mcfg: MAvgConfig = train_cfg.mavg
+        self.obs_cfg = train_cfg.obs
         self.loss_fn = loss_fn
         self.batch_fn = batch_fn
         self.lr_schedule = lr_schedule
         self.mesh = mesh
+        self._state_shardings = state_shardings if mesh is not None else None
 
         rng = jax.random.PRNGKey(train_cfg.seed)
         self.data_rng, init_rng = jax.random.split(rng)
         params = init_params_fn(init_rng)
         self.state = init_state(params, self.mcfg)
-        step_fn = make_meta_step(loss_fn, self.mcfg)
+        self._step_fn = make_meta_step(loss_fn, self.mcfg)
 
-        def jit_step(state, batches, lr):
-            return step_fn(state, batches, lr=lr)
+        # telemetry is built lazily at the first run() iteration: the
+        # metric-key set is only known from the step's abstract output
+        # (jax.eval_shape — no compile), and the ring must exist before
+        # the first fused dispatch
+        self._mb: Optional[MetricsBuffer] = None
+        self._fused = None
+        self._sink = None
+        self.manifest: Optional[dict] = None
+        self.tracer = Tracer(self.obs_cfg.trace)
+        self._restored = False
+        self.history: list[dict] = []
 
-        # donation + the state in==out sharding pairing come from the one
-        # assembly point every launcher uses (launch/specs.py): under
-        # mcfg.donate the input MetaState is donated to the step and
-        # updated in place (zero-copy meta phase, DESIGN.md §10);
-        # everything below (run/metrics/checkpoints/restore) works off
-        # the returned state only, never a pre-step one
+    # ------------------------------------------------------------------
+    # telemetry assembly (lazy, once per Trainer)
+    # ------------------------------------------------------------------
+
+    def _init_obs(self, batches, lr):
+        """Build the metric ring, fused jitted step, manifest and sink.
+
+        The fused step writes the step's metric scalars into row ``mrow``
+        of the donated ring *inside* the jitted program:
+
+            step(state, batches, lr, mbuf, mrow) -> (state', mbuf')
+
+        Metrics therefore reach the host exclusively through
+        ``MetricsBuffer.flush`` (one bulk device_get per log window) —
+        there is no per-step host read to accidentally sync on, and under
+        ``mcfg.donate`` the metric write adds zero copies: both the state
+        and the ring are updated in place.
+        """
+        obs = self.obs_cfg
+
+        def fused(state, b, lr_, mbuf, mrow):
+            state, metrics = self._step_fn(state, b, lr=lr_)
+            mbuf = write_row(mbuf, mrow, metrics, self._mkeys)
+            return state, mbuf
+
+        # abstract eval discovers the metric keys without compiling
+        _, metrics_sds = jax.eval_shape(
+            lambda s, b, l: self._step_fn(s, b, lr=l), self.state, batches, lr
+        )
+        self._mkeys = metric_keys(metrics_sds)
+        capacity = obs.buffer_capacity or max(self.cfg.log_every, 1)
+        self._mb = MetricsBuffer(self._mkeys, capacity)
+
         from repro.launch.specs import meta_step_jit_kwargs
 
         kwargs = meta_step_jit_kwargs(
             self.mcfg,
-            state_shardings if mesh is not None else None,
-            n_extra_args=2,
+            self._state_shardings,
+            n_extra_args=4,
+            donate_extra=(_RING_ARGNUM,),
         )
-        self._step = jax.jit(jit_step, **kwargs)
-        self.history: list[dict] = []
+        self._fused = jax.jit(fused, **kwargs)
+
+        jc = None
+        if obs.cost_analysis:
+            from repro.roofline.hlo_cost import jit_cost
+
+            try:
+                # the bare (state, batches, lr) step, not the fused one:
+                # the metric ring is telemetry, not part of the training
+                # program whose HBM/peak-state cost the manifest records
+                jc = jit_cost(
+                    lambda s, b, l: self._step_fn(s, b, lr=l),
+                    self.state, batches, lr,
+                    **({"donate_argnums": (0,)} if self.mcfg.donate else {}),
+                )
+            except Exception:  # cost analysis is best-effort telemetry
+                jc = None
+        self.manifest = run_manifest(
+            train_cfg=self.cfg,
+            mcfg=self.mcfg,
+            spec=getattr(self.state, "spec", None),
+            jit_cost=jc,
+        )
+        if obs.sink != "none" and self._sink is None:
+            self._sink = make_sink(
+                obs.sink, obs.run_dir, resume=self._restored
+            )
+            self._sink.open_run(self.manifest)
+
+    # ------------------------------------------------------------------
+    # driving loop
+    # ------------------------------------------------------------------
 
     def run(self, meta_steps: Optional[int] = None, log=print):
         """Drive ``meta_steps`` jitted steps.
 
         Metrics stay on-device until a ``log_every`` boundary (or the end
-        of the run): materializing ``float(v)`` per step blocks the host
-        on device completion and serializes dispatch, so the in-between
-        steps are enqueued back-to-back and only the boundary step pays
-        the sync. ``history`` still holds plain float dicts afterwards.
+        of the run): the fused step accumulates them into the MetricsBuffer
+        ring, and only the boundary pays one bulk device_get — the
+        in-between steps are enqueued back-to-back with zero host syncs.
+        ``history`` holds plain float dicts afterwards, now including
+        wall-clock throughput (``meta_steps_per_sec``, ``samples_per_sec``,
+        ``elapsed_s``) computed host-side per flush window.
 
         Donation contract (``MAvgConfig.donate``): the state handed to
-        ``self._step`` is dead the moment the call is dispatched — its
-        planes are aliased into the returned state's. Everything in this
-        loop therefore works off the RETURNED state: the step counter is
-        read once before any dispatch, metrics are step outputs, the
-        checkpoint cadence is host arithmetic on python ints, and
-        ``save_state`` snapshots the state a step returned (never an
-        input that a later dispatch may have consumed). ``self.state``
-        always rebinds to the live returned state, so ``restore``/resume
-        and post-run eval see valid buffers.
+        the fused step is dead the moment the call is dispatched — its
+        planes are aliased into the returned state's, and the metric ring
+        is likewise donated and rebound every step. Everything in this
+        loop therefore works off RETURNED values: the step counter is
+        read once before any dispatch, metrics are step outputs flushed
+        from the returned ring, the checkpoint cadence is host arithmetic
+        on python ints, and ``save_state`` snapshots a returned state
+        (never an input a later dispatch may have consumed).
         """
         n = meta_steps if meta_steps is not None else self.cfg.meta_steps
-        t0 = time.time()
+        run_t0 = time.time()
         start = int(self.state.step)  # the only pre-loop host sync
-        pending: list[tuple[int, dict]] = []
+        self._last_flush_t = run_t0
+        samples_per_meta = (
+            self.mcfg.num_learners
+            * self.mcfg.k_steps
+            * self.cfg.batch_per_learner
+        )
 
         def flush():
-            for s, dev_metrics in pending:
-                metrics = {k: float(v) for k, v in dev_metrics.items()}
-                metrics["meta_step"] = s
-                metrics["samples"] = (
-                    (s + 1)
-                    * self.mcfg.num_learners
-                    * self.mcfg.k_steps
-                    * self.cfg.batch_per_learner
-                )
-                self.history.append(metrics)
-            pending.clear()
+            if self._mb is None or not self._mb.count:
+                return
+            with self.tracer.span("obs.host_flush"):
+                recs = self._mb.flush()
+            now = time.time()
+            dt = max(now - self._last_flush_t, 1e-9)
+            self._last_flush_t = now
+            msps = len(recs) / dt
+            for r in recs:
+                s = r["meta_step"]
+                r["samples"] = (s + 1) * samples_per_meta
+                r["meta_steps_per_sec"] = msps
+                r["samples_per_sec"] = msps * samples_per_meta
+                r["elapsed_s"] = now - run_t0
+                self.history.append(r)
+            if self._sink is not None:
+                with self.tracer.span("obs.sink_append"):
+                    for r in recs:
+                        self._sink.append(r)
+                    self._sink.flush()
 
+        if self.obs_cfg.profiler and self.obs_cfg.run_dir:
+            self.tracer.profiler_start(
+                os.path.join(self.obs_cfg.run_dir, "jax_trace")
+            )
         try:
             for i in range(n):
                 step = start + i
@@ -110,8 +220,16 @@ class Trainer:
                     if self.lr_schedule
                     else jnp.float32(self.mcfg.learner_lr)
                 )
-                self.state, metrics = self._step(self.state, batches, lr)
-                pending.append((step, metrics))
+                if self._mb is None:
+                    self._init_obs(batches, lr)
+                if self._mb.full:  # ring smaller than the log window
+                    flush()
+                with self.tracer.span("obs.dispatch"):
+                    self.state, ring = self._fused(
+                        self.state, batches, lr,
+                        self._mb.buf, self._mb.row_index(),
+                    )
+                self._mb.note(step, ring)
                 if log and (step % self.cfg.log_every == 0):
                     flush()
                     m = self.history[-1]
@@ -119,17 +237,39 @@ class Trainer:
                         f"[{self.mcfg.algorithm}] meta_step={step} "
                         f"loss={m['loss']:.4f} "
                         f"gnorm={m.get('grad_norm', 0):.3f} "
-                        f"({time.time() - t0:.1f}s)"
+                        f"{m['meta_steps_per_sec']:.2f} steps/s "
+                        f"{m['samples_per_sec']:.0f} samples/s "
+                        f"({time.time() - run_t0:.1f}s)"
                     )
                 if (
                     self.cfg.checkpoint_dir
                     and self.cfg.checkpoint_every
                     and (step + 1) % self.cfg.checkpoint_every == 0
                 ):
-                    save_state(self.cfg.checkpoint_dir, self.state, step + 1)
+                    with self.tracer.span("obs.checkpoint_io"):
+                        save_state(
+                            self.cfg.checkpoint_dir, self.state, step + 1,
+                            manifest=self.manifest,
+                        )
         finally:
             flush()  # metrics of completed steps survive an interrupt
+            if self._sink is not None:
+                self._sink.flush()
+            self.tracer.profiler_stop()
+            if self.obs_cfg.trace and self.obs_cfg.run_dir:
+                self.tracer.export_chrome_trace(
+                    os.path.join(self.obs_cfg.run_dir, "trace.json")
+                )
         return self.history
 
     def restore(self, path):
         self.state = load_state(path, self.state)
+        # a sink opened after restore appends to the existing run log
+        # instead of truncating it (resume continues the same run)
+        self._restored = True
+
+    def close(self):
+        """Flush and close the telemetry sink (idempotent)."""
+        if self._sink is not None:
+            self._sink.close()
+            self._sink = None

@@ -96,7 +96,8 @@ def _batch_axes(mesh, batch: int):
 
 
 def meta_step_jit_kwargs(mcfg: MAvgConfig, state_shardings=None,
-                         n_extra_args: int = 2) -> dict:
+                         n_extra_args: int = 2,
+                         donate_extra: tuple = ()) -> dict:
     """jax.jit kwargs for a ``step(state, batches, ...)`` meta step.
 
     One assembly point so every launcher agrees on the two coupled
@@ -111,8 +112,13 @@ def meta_step_jit_kwargs(mcfg: MAvgConfig, state_shardings=None,
       the step under one sharding. (It also keeps the loop-carried
       layout stable across steps, donation or not.)
 
-    ``n_extra_args`` counts the non-state positional args (batches, lr)
-    which stay unsharded/unconstrained.
+    ``n_extra_args`` counts the non-state positional args (batches, lr,
+    and the telemetry ring under repro.obs) which stay unsharded /
+    unconstrained. ``donate_extra`` names additional loop-carried argnums
+    to donate regardless of ``mcfg.donate`` — the Trainer's on-device
+    MetricsBuffer ring rides here (DESIGN.md §11): the caller never
+    re-reads a pre-step ring, so its row write is always safe to do in
+    place.
     """
     from repro.core.meta import STATE_ARGNUM
 
@@ -120,8 +126,9 @@ def meta_step_jit_kwargs(mcfg: MAvgConfig, state_shardings=None,
     if state_shardings is not None:
         kwargs["in_shardings"] = (state_shardings,) + (None,) * n_extra_args
         kwargs["out_shardings"] = (state_shardings, None)
-    if mcfg.donate:
-        kwargs["donate_argnums"] = (STATE_ARGNUM,)
+    donate = ((STATE_ARGNUM,) if mcfg.donate else ()) + tuple(donate_extra)
+    if donate:
+        kwargs["donate_argnums"] = donate
     return kwargs
 
 

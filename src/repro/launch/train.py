@@ -23,10 +23,12 @@ from repro.configs.base import (
     ALGORITHMS,
     COMM_SCHEMES,
     GOSSIP_GRAPHS,
+    OBS_SINKS,
     TOPOLOGIES,
     CommConfig,
     ElasticConfig,
     MAvgConfig,
+    ObsConfig,
     TopologyConfig,
     TrainConfig,
     get_config,
@@ -82,6 +84,24 @@ def main() -> None:
                     help="fraction of learners absent per scheduled step")
     ap.add_argument("--elastic-seed", type=int, default=0,
                     help="seed of the deterministic membership schedule")
+    ap.add_argument("--obs-sink", default="none", choices=OBS_SINKS,
+                    help="structured run log sink (repro.obs): per-step "
+                         "telemetry records under a run manifest")
+    ap.add_argument("--run-dir", default=None,
+                    help="run-log / trace directory (required for the "
+                         "jsonl and csv sinks)")
+    ap.add_argument("--trace", action="store_true",
+                    help="phase span timers + Chrome-trace export to "
+                         "<run-dir>/trace.json")
+    ap.add_argument("--profiler", action="store_true",
+                    help="capture a jax.profiler device trace into "
+                         "<run-dir>/jax_trace")
+    ap.add_argument("--obs-cost", action="store_true",
+                    help="record the compiled meta step's measured HBM / "
+                         "peak-state numbers in the run manifest")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest checkpoint from "
+                         "--checkpoint-dir and append to the run log")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -122,6 +142,9 @@ def main() -> None:
         model=cfg, mavg=mcfg, batch_per_learner=args.batch, seq_len=args.seq,
         meta_steps=args.steps, checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=10 if args.checkpoint_dir else 0,
+        obs=ObsConfig(sink=args.obs_sink, run_dir=args.run_dir,
+                      trace=args.trace, profiler=args.profiler,
+                      cost_analysis=args.obs_cost),
     )
 
     def loss_fn(params, batch):
@@ -134,6 +157,14 @@ def main() -> None:
         batch_fn=lm_batch_fn(cfg, args.learners, args.k, args.batch, args.seq),
         lr_schedule=warmup_cosine(args.lr, 5, args.steps),
     )
+    if args.resume:
+        from repro.checkpoint import latest_checkpoint
+
+        ckpt = latest_checkpoint(args.checkpoint_dir or "")
+        if ckpt is None:
+            raise SystemExit("--resume: no checkpoint in --checkpoint-dir")
+        trainer.restore(ckpt)
+        print(f"resumed from {ckpt}")
     history = trainer.run()
 
     eval_batch = lm_eval_set(cfg, n=32, seq_len=args.seq)

@@ -1,0 +1,52 @@
+"""repro.obs — on-device training telemetry, phase tracing, structured
+run sinks (DESIGN.md §11).
+
+Three pieces, composable and individually optional:
+
+* ``MetricsBuffer`` (metrics.py): a fixed-size device-side ring of
+  per-step metric rows, written INSIDE the jitted meta step (donated, in
+  place) and flushed to host with one bulk transfer per ``log_every``
+  window — telemetry without extra host syncs.
+* ``Sink`` (sink.py): where flushed records and the run manifest go —
+  JSONL (canonical, append-on-resume), CSV, or in-memory. Every Trainer
+  run and every bench emits the same record envelope.
+* ``Tracer`` (trace.py): config-gated phase span timers with Chrome-trace
+  export and ``jax.profiler`` hooks.
+
+``run_manifest`` (manifest.py) is the shared run-identity record: config,
+PackSpec hash, topology/reducer/elastic settings, jax/device info, and
+optionally the measured compiled-program cost (roofline.hlo_cost).
+"""
+from repro.obs.manifest import (
+    SCHEMA_VERSION,
+    device_env,
+    packspec_hash,
+    run_manifest,
+)
+from repro.obs.metrics import MetricsBuffer, metric_keys, write_row
+from repro.obs.sink import (
+    SINKS,
+    CsvSink,
+    JsonlSink,
+    MemorySink,
+    Sink,
+    make_sink,
+)
+from repro.obs.trace import Tracer
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "SINKS",
+    "CsvSink",
+    "JsonlSink",
+    "MemorySink",
+    "MetricsBuffer",
+    "Sink",
+    "Tracer",
+    "device_env",
+    "make_sink",
+    "metric_keys",
+    "packspec_hash",
+    "run_manifest",
+    "write_row",
+]

@@ -1,0 +1,98 @@
+"""The per-run manifest: everything needed to interpret a run log.
+
+One dict, JSON-able, written as the first record of every sink stream
+(sink.py) and alongside checkpoints (checkpoint/npz.py): the full config,
+the packed meta-plane layout hash (a resume against a different layout is
+a different run — the same guard load_state enforces bitwise), the
+topology / reducer / elastic settings that decide which metric columns
+exist, and the jax / device environment. Optionally the measured
+compiled-program numbers from ``roofline.hlo_cost.jit_cost`` (HBM bytes,
+peak state, flops) so every run log carries the cost model it ran under.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import time
+
+import jax
+
+SCHEMA_VERSION = 1
+
+
+def packspec_hash(spec) -> str | None:
+    """Short stable hash of the packed meta-plane layout (repro.pack
+    PackSpec) — the identity of the flat-buffer encoding, matching what
+    the checkpoint ``__packspec__`` sidecar records."""
+    if spec is None:
+        return None
+    blob = json.dumps(spec.layout_dict(), sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def device_env() -> dict:
+    devs = jax.devices()
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "devices": [str(d) for d in devs[:8]] + (
+            [f"... {len(devs) - 8} more"] if len(devs) > 8 else []
+        ),
+        "process_index": jax.process_index(),
+    }
+
+
+def run_manifest(*, train_cfg=None, mcfg=None, spec=None, suite=None,
+                 jit_cost=None, extra=None) -> dict:
+    """Build the manifest dict.
+
+    ``train_cfg``: TrainConfig (trainer runs — carries the MAvgConfig);
+    ``mcfg``: bare MAvgConfig (benches that bypass the Trainer);
+    ``suite``: bench suite name (bench logs); ``jit_cost``: a
+    ``roofline.hlo_cost.JitCost`` of the jitted meta step; ``extra``:
+    free-form additions (merged last, so callers can annotate).
+    """
+    from repro.configs.base import to_dict
+
+    man = {
+        "schema_version": SCHEMA_VERSION,
+        "created_unix": time.time(),
+        **device_env(),
+    }
+    if suite is not None:
+        man["suite"] = str(suite)
+    m = train_cfg.mavg if train_cfg is not None else mcfg
+    if m is not None:
+        man.update(
+            algorithm=m.algorithm,
+            num_learners=m.num_learners,
+            k_steps=m.k_steps,
+            topology=m.topology.kind,
+            comm_scheme=m.comm.scheme,
+            elastic=m.topology.elastic is not None,
+            packed=m.packed,
+            donate=m.donate,
+        )
+    if train_cfg is not None:
+        cfg_dict = to_dict(train_cfg)
+        # the model config may be None in synthetic-loss runs (tests)
+        man["config"] = cfg_dict
+    elif mcfg is not None:
+        man["config"] = to_dict(mcfg)
+    h = packspec_hash(spec)
+    if h is not None:
+        man["packspec_hash"] = h
+    if jit_cost is not None:
+        man["jit_cost"] = {
+            "hbm_bytes": float(jit_cost.hbm_bytes),
+            "flops": float(jit_cost.flops),
+            "arg_bytes": int(jit_cost.arg_bytes),
+            "out_bytes": int(jit_cost.out_bytes),
+            "alias_bytes": int(jit_cost.alias_bytes),
+            "temp_bytes": int(jit_cost.temp_bytes),
+            "peak_state_bytes": int(jit_cost.peak_state_bytes),
+        }
+    if extra:
+        man.update(extra)
+    return man

@@ -1,0 +1,132 @@
+"""On-device metrics ring: per-step metric planes, one host sync per flush.
+
+The training loop's observability problem is a sync problem: reading any
+scalar metric with ``float(v)`` blocks the host on device completion and
+serializes dispatch, so per-step host reads turn an async pipelined loop
+into a lock-step one. The ``MetricsBuffer`` keeps per-step metrics ON
+DEVICE in a fixed-size (capacity, n_metrics) f32 ring: each meta step
+writes one row *inside the jitted step* (``write_row`` composes into the
+step's trace, so telemetry adds zero extra kernel launches and zero
+extra host syncs), and ``flush()`` materializes the whole window with a
+single device->host transfer at ``log_every`` boundaries — the same sync
+cadence as the pending-list path it replaces (Trainer.run), now with one
+bulk transfer instead of one tiny transfer per scalar.
+
+Donation contract (DESIGN.md §10): the ring buffer is donated to the
+jitted step alongside the MetaState, so the row write is an in-place
+dynamic-update-slice — no second buffer is ever live. Like the state,
+the buffer handed to a donated step is DEAD after dispatch; callers
+rebind to the returned buffer (``note`` is the Trainer-side helper that
+does so). Metrics are step OUTPUTS, never reads of a donated input.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+def metric_keys(metrics) -> tuple[str, ...]:
+    """Stable (sorted) key order of a metrics dict — the column layout of
+    the ring. Derived once per run from an abstract evaluation of the
+    step (``jax.eval_shape``), so the jitted row write and the flush
+    decode agree without a host read."""
+    return tuple(sorted(metrics))
+
+
+def write_row(buf, row, metrics, keys):
+    """Write one metric row into the ring *inside a jit trace*.
+
+    ``buf``: (capacity, n) f32 ring; ``row``: traced int32 row index;
+    ``metrics``: dict of scalar (traced) values; ``keys``: static column
+    order (``metric_keys``). Values cast to f32 — the ring is a telemetry
+    plane, not part of the optimizer state.
+    """
+    vals = jnp.stack(
+        [jnp.asarray(metrics[k], jnp.float32).reshape(()) for k in keys]
+    )
+    return lax.dynamic_update_slice(buf, vals[None], (row, jnp.int32(0)))
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _append(buf, row, vals):
+    return lax.dynamic_update_slice(buf, vals[None], (row, jnp.int32(0)))
+
+
+class MetricsBuffer:
+    """Host-side handle of the device ring.
+
+    ``keys``      static column order (metric name per column)
+    ``capacity``  rows before a flush is forced (size to >= log_every)
+    ``buf``       the live device ring — pass into the jitted step, then
+                  ``note(step, returned_buf)`` to rebind (donation)
+    ``host_syncs`` number of device->host transfers performed — the
+                  quantity the telemetry tests pin (no hidden syncs)
+    """
+
+    def __init__(self, keys, capacity: int):
+        assert capacity >= 1, capacity
+        self.keys = tuple(keys)
+        self.capacity = int(capacity)
+        self.buf = jnp.zeros((self.capacity, len(self.keys)), jnp.float32)
+        self.steps: list[int] = []  # meta_step of each pending row, in order
+        self.host_syncs = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def count(self) -> int:
+        """Pending rows since the last flush (the next write's row index)."""
+        return len(self.steps)
+
+    @property
+    def full(self) -> bool:
+        return len(self.steps) >= self.capacity
+
+    def row_index(self):
+        """The next row index as a device scalar — pass it traced so the
+        jitted step is compiled once, not once per row."""
+        return jnp.asarray(self.count, jnp.int32)
+
+    def note(self, step: int, new_buf) -> None:
+        """Record a dispatched row: the jitted step wrote row ``count``
+        and returned the (donated) ring as ``new_buf``."""
+        assert not self.full, "MetricsBuffer overflow — flush() before append"
+        self.steps.append(int(step))
+        self.buf = new_buf
+
+    # ------------------------------------------------------------------
+    def append(self, metrics, step: int) -> None:
+        """Standalone append (benches / tests): one tiny async device
+        launch, still no host sync."""
+        if self.full:
+            raise RuntimeError(
+                f"MetricsBuffer full ({self.capacity} rows) — flush() first"
+            )
+        vals = jnp.stack(
+            [jnp.asarray(metrics[k], jnp.float32).reshape(()) for k in self.keys]
+        )
+        self.buf = _append(self.buf, self.row_index(), vals)
+        self.steps.append(int(step))
+
+    def flush(self) -> list[dict]:
+        """Materialize all pending rows with ONE device->host transfer.
+
+        Returns a list of plain-float dicts (one per pending step, with
+        ``meta_step`` attached) and resets the pending window. Rows are
+        decoded bitwise as written: f32 on device, f32 across the wire,
+        widened to python float only at the dict boundary.
+        """
+        if not self.steps:
+            return []
+        rows = np.asarray(jax.device_get(self.buf))[: len(self.steps)]
+        self.host_syncs += 1
+        out = []
+        for s, row in zip(self.steps, rows):
+            rec = {k: float(v) for k, v in zip(self.keys, row)}
+            rec["meta_step"] = s
+            out.append(rec)
+        self.steps.clear()
+        return out

@@ -1,0 +1,161 @@
+"""Structured run sinks: one record schema for every trainer run and bench.
+
+A run log is a stream of flat JSON-able records with a ``kind`` tag:
+
+    {"kind": "manifest", ...}   run environment + config (manifest.py)
+    {"kind": "step", ...}       one per-meta-step telemetry record
+    {"kind": "row", ...}        one benchmark result row (benchmarks/)
+
+Sinks are dumb and synchronous by design — all batching happens upstream
+in the on-device ``MetricsBuffer`` (metrics.py), so a sink append is a
+handful of host floats, never a device sync. ``JsonlSink`` is the
+canonical on-disk format (append-only, resume-friendly: a resumed run
+reopens the same file in append mode and writes a fresh manifest line —
+``tools/check_telemetry.py`` validates the stream); ``CsvSink`` is for
+spreadsheet ergonomics; ``MemorySink`` for tests and in-process readers
+(the K_g/mu autotuner consumes it).
+"""
+from __future__ import annotations
+
+import csv
+import json
+import os
+from typing import Optional
+
+
+class Sink:
+    """Protocol: open_run(manifest) once per (re)open, append(record) per
+    step/row, flush() at sync boundaries, close() when done."""
+
+    def open_run(self, manifest: dict) -> None:
+        raise NotImplementedError
+
+    def append(self, record: dict) -> None:
+        raise NotImplementedError
+
+    def flush(self) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+
+class MemorySink(Sink):
+    """In-memory record list — tests, notebooks, and online consumers."""
+
+    def __init__(self):
+        self.manifests: list[dict] = []
+        self.records: list[dict] = []
+
+    def open_run(self, manifest: dict) -> None:
+        self.manifests.append(dict(manifest))
+
+    def append(self, record: dict) -> None:
+        self.records.append(dict(record))
+
+
+class JsonlSink(Sink):
+    """Append-only JSONL file; one JSON object per line.
+
+    ``resume=True`` appends to an existing file (the same run log across
+    restarts — meta_step stays monotone across the manifest boundary);
+    ``resume=False`` truncates. The manifest is written as the first line
+    of every (re)open so a reader can always recover the config that
+    produced the records that follow it.
+    """
+
+    def __init__(self, path: str, *, resume: bool = False):
+        self.path = path
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        self._f = open(path, "a" if resume else "w")
+
+    def open_run(self, manifest: dict) -> None:
+        self._write({"kind": "manifest", **manifest})
+
+    def append(self, record: dict) -> None:
+        rec = record if record.get("kind") else {"kind": "step", **record}
+        self._write(rec)
+
+    def _write(self, obj: dict) -> None:
+        self._f.write(json.dumps(obj, sort_keys=True, default=_jsonify) + "\n")
+
+    def flush(self) -> None:
+        self._f.flush()
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+
+class CsvSink(Sink):
+    """CSV of the step records; the manifest goes to a JSON sidecar
+    (``<path>.manifest.json``) since it is nested. The header is fixed by
+    the FIRST record's keys; later records must agree (one schema per
+    run is the whole point)."""
+
+    def __init__(self, path: str, *, resume: bool = False):
+        self.path = path
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        existing = resume and os.path.exists(path) and os.path.getsize(path) > 0
+        self._f = open(path, "a" if resume else "w", newline="")
+        self._writer: Optional[csv.DictWriter] = None
+        if existing:
+            with open(path) as f:
+                header = f.readline().strip()
+            if header:
+                self._writer = csv.DictWriter(
+                    self._f, fieldnames=header.split(",")
+                )
+
+    def open_run(self, manifest: dict) -> None:
+        with open(self.path + ".manifest.json", "w") as f:
+            json.dump(manifest, f, indent=2, sort_keys=True, default=_jsonify)
+
+    def append(self, record: dict) -> None:
+        if self._writer is None:
+            self._writer = csv.DictWriter(self._f, fieldnames=sorted(record))
+            self._writer.writeheader()
+        self._writer.writerow(record)
+
+    def flush(self) -> None:
+        self._f.flush()
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+
+def _jsonify(x):
+    """numpy / jax scalars -> python scalars at the serialization boundary."""
+    if hasattr(x, "item"):
+        return x.item()
+    if hasattr(x, "tolist"):
+        return x.tolist()
+    return str(x)
+
+
+SINKS = ("none", "jsonl", "csv", "memory")
+
+
+def make_sink(kind: str, run_dir: Optional[str] = None, *,
+              resume: bool = False) -> Optional[Sink]:
+    """Build the sink named by ``ObsConfig.sink`` (None for 'none').
+
+    File sinks write ``<run_dir>/run.jsonl`` / ``run.csv`` — one
+    canonical filename per run directory so resume finds the same log.
+    """
+    if kind == "none":
+        return None
+    if kind == "memory":
+        return MemorySink()
+    if run_dir is None:
+        raise ValueError(f"sink {kind!r} needs a run_dir (ObsConfig.run_dir)")
+    if kind == "jsonl":
+        return JsonlSink(os.path.join(run_dir, "run.jsonl"), resume=resume)
+    if kind == "csv":
+        return CsvSink(os.path.join(run_dir, "run.csv"), resume=resume)
+    raise ValueError(f"unknown sink {kind!r}; choose from {SINKS}")

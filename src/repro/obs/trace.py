@@ -1,0 +1,107 @@
+"""Phase tracing: config-gated span timers with Chrome-trace export.
+
+The training loop has four host-visible phases worth timing — step
+dispatch (local phase + meta mix enqueue), host flush (the one sync per
+``log_every`` window), checkpoint I/O, and sink writes. ``Tracer.span``
+wraps each in a wall-clock timer plus a ``jax.profiler.TraceAnnotation``
+so the spans also show up inside a device profile when one is being
+captured (``profiler_start``/``profiler_stop`` drive
+``jax.profiler.start_trace`` around the run; the on-device split of
+local phase vs meta mix comes from the ``jax.named_scope`` annotations
+in ``core.meta.meta_step``, which label the HLO itself).
+
+Disabled tracers cost one predicate per span — safe to leave in hot
+paths. ``export_chrome_trace`` writes the collected spans in the Chrome
+``chrome://tracing`` / Perfetto JSON event format, no profiler plugin
+needed.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from contextlib import contextmanager
+
+
+class Tracer:
+    def __init__(self, enabled: bool = False):
+        self.enabled = bool(enabled)
+        self.events: list[tuple[str, float, float]] = []  # (name, t0, dur) s
+        self._t0 = time.perf_counter()
+        self._profiling = False
+
+    @contextmanager
+    def span(self, name: str):
+        """Time a phase; no-op (one branch) when disabled."""
+        if not self.enabled:
+            yield
+            return
+        import jax
+
+        t0 = time.perf_counter()
+        try:
+            with jax.profiler.TraceAnnotation(name):
+                yield
+        finally:
+            self.events.append((name, t0 - self._t0, time.perf_counter() - t0))
+
+    # ------------------------------------------------------------------
+    def summary(self) -> dict:
+        """{phase: {count, total_s, mean_s}} over all recorded spans."""
+        out: dict[str, dict] = {}
+        for name, _t, dur in self.events:
+            s = out.setdefault(name, {"count": 0, "total_s": 0.0})
+            s["count"] += 1
+            s["total_s"] += dur
+        for s in out.values():
+            s["mean_s"] = s["total_s"] / s["count"]
+        return out
+
+    def export_chrome_trace(self, path: str) -> str:
+        """Write spans as Chrome-trace JSON (load in chrome://tracing or
+        https://ui.perfetto.dev). Timestamps in microseconds since the
+        tracer was created."""
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        events = [
+            {
+                "name": name,
+                "ph": "X",  # complete event: begin + duration
+                "ts": t0 * 1e6,
+                "dur": dur * 1e6,
+                "pid": 0,
+                "tid": 0,
+                "cat": "repro.obs",
+            }
+            for name, t0, dur in self.events
+        ]
+        with open(path, "w") as f:
+            json.dump({"traceEvents": events, "displayTimeUnit": "ms"}, f)
+        return path
+
+    # ------------------------------------------------------------------
+    def profiler_start(self, trace_dir: str) -> bool:
+        """Start a jax device profile into ``trace_dir`` (TensorBoard /
+        xplane format, includes its own Chrome trace). Best-effort: some
+        builds lack profiler support — returns False instead of raising
+        so telemetry never kills a run."""
+        try:
+            import jax
+
+            jax.profiler.start_trace(trace_dir)
+            self._profiling = True
+            return True
+        except Exception:
+            return False
+
+    def profiler_stop(self) -> None:
+        if not self._profiling:
+            return
+        try:
+            import jax
+
+            jax.profiler.stop_trace()
+        except Exception:
+            pass
+        self._profiling = False

@@ -26,6 +26,7 @@ from __future__ import annotations
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 
 from repro.configs.base import MAvgConfig
 # the packed-plane dispatch predicate lives with the kernels it routes to
@@ -147,6 +148,14 @@ class FlatAllReduce(Topology):
             learners, gp, comm_residual, step=step
         )
         avg = tree_cast(avg, cfg.meta_dtype)
+        # pre-reset learner consensus: how far the K local steps drove the
+        # learners apart before this average pulled them back — the
+        # quantity the K/mu trade-off analyses bound (telemetry, DESIGN.md
+        # §11; after the reset below consensus is identically zero)
+        consensus = tree_norm(
+            jax.tree.map(lambda w, a: w.astype(jnp.float32) - a[None],
+                         learners, tree_cast(avg, jnp.float32))
+        )
         if is_packed_plane(gp):
             # packed meta plane: momentum + learner reset in one pass
             gp_new, v, learners = fused_momentum_broadcast_update(
@@ -166,6 +175,7 @@ class FlatAllReduce(Topology):
         metrics = {
             "v_norm": tree_norm(v),
             "displacement_norm": tree_norm(tree_sub(avg, gp)),
+            "consensus_dist": consensus,
         }
         metrics.update(comm_metrics)
         return gp_new, v, learners, comm_residual, topo, metrics

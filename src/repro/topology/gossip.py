@@ -156,6 +156,30 @@ def avg_graph_degree(graph: str, L: int) -> float:
     return sum(graph_degree(graph, L, t) for t in range(T)) / T
 
 
+def spectral_gap(W, mask=None) -> jnp.ndarray:
+    """1 - |lambda_2| of a symmetric doubly-stochastic W — the consensus
+    rate of one gossip round (gap 1 = complete graph / exact averaging,
+    gap -> 0 = disconnected). Traceable (jnp.linalg.eigvalsh), so it
+    works on the per-step masked matrices of elastic schedules, where the
+    gap is the health metric that says whether churn broke mixing
+    (telemetry, DESIGN.md §11).
+
+    ``mask``: (L,) 0/1 present mask of an elastic-masked W
+    (mask_mixing_matrix). Absent learners are identity rows — each a
+    spurious eigenvalue 1 that would report gap 0 under ANY churn — so
+    they are deflated to eigenvalue 0 (their diagonal 1 is subtracted),
+    leaving the gap of the present-subset mixing block, which is the
+    consensus rate of the learners actually exchanging this step.
+    """
+    W = jnp.asarray(W, jnp.float32)
+    if W.shape[0] < 2:
+        return jnp.float32(1.0)
+    if mask is not None:
+        W = W - jnp.diag(1.0 - jnp.asarray(mask, jnp.float32))
+    lam = jnp.sort(jnp.abs(jnp.linalg.eigvalsh(W)))
+    return 1.0 - lam[-2]
+
+
 # ---------------------------------------------------------------------------
 # per-learner compression (the reducer's compress stage without the mean)
 # ---------------------------------------------------------------------------
@@ -208,6 +232,12 @@ class Gossip(Topology):
         self.W = self.W_stack[0]  # step-0 matrix (static graphs: the matrix)
         self.degree = graph_degree(t.graph, cfg.num_learners)
         self.avg_degree = avg_graph_degree(t.graph, cfg.num_learners)
+        # per-step-matrix spectral gaps of the static schedule; elastic
+        # masks recompute the gap in-trace on the masked matrix
+        # (spectral_gap) since W then varies by mask. Kept as jnp ops —
+        # topologies may be constructed inside a trace (make_topology is
+        # called per trace), where a host float() would leak the tracer
+        self.gap_stack = jnp.stack([spectral_gap(W) for W in self.W_stack])
 
     # ------------------------------------------------------------------
     def init_buffers(self, gp, cfg: MAvgConfig):
@@ -304,12 +334,26 @@ class Gossip(Topology):
         edges = present_edge_count(
             W, jnp.ones((L,), jnp.float32) if mask is None else mask
         )
+        comm_bytes = (wire / L) * edges
+        comm_dense = (db / L) * edges
+        # mixing-matrix health: the static schedule's gap is precomputed
+        # per step matrix; under elastic masking the gap of the ACTUAL
+        # masked W is the live signal that churn kept the graph mixing
+        gap = (
+            spectral_gap(W, mask) if mask is not None
+            else jnp.take(self.gap_stack, step % self.period)
+        )
         metrics = {
             "v_norm": tree_norm(vL),
             "displacement_norm": tree_norm(tree_sub(mixed, xp)),
             "consensus_dist": consensus,
-            "comm_bytes": (wire / L) * edges,
-            "comm_bytes_dense": (db / L) * edges,
+            "mixing_spectral_gap": gap,
+            "comm_bytes": comm_bytes,
+            "comm_bytes_dense": comm_dense,
+            "comm_compression": jnp.where(
+                comm_bytes > 0, comm_dense / jnp.maximum(comm_bytes, 1.0),
+                jnp.float32(1.0),
+            ),
         }
         if mask is not None:
             metrics["present_count"] = jnp.sum(mask)

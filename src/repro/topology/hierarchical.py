@@ -278,17 +278,32 @@ class Hierarchical(Topology):
         }
         if membership is not None:
             topo["membership"] = membership  # the schedule rides unchanged
+        total_bytes = intra_bytes + outer_bytes
+        total_dense = intra_dense + outer_dense
         metrics = {
             "v_norm": tree_norm(v_new),
             "group_v_norm": tree_norm(gmom),
             "displacement_norm": inner_disp,
+            # cross-group consensus: how far the per-group meta params
+            # have drifted from their mean between outer averages — the
+            # signal a per-group K_g autotuner reads (telemetry, §11)
+            "consensus_dist": tree_norm(
+                jax.tree.map(
+                    lambda g: g - jnp.mean(g, axis=0, keepdims=True), gparams
+                )
+            ),
             "outer_fired": do_outer.astype(jnp.float32),
             # per-edge-class modeled wire traffic (intra every step,
             # inter only when the outer level fires)
             "comm_bytes_intra": intra_bytes,
             "comm_bytes_inter": outer_bytes,
-            "comm_bytes": intra_bytes + outer_bytes,
-            "comm_bytes_dense": intra_dense + outer_dense,
+            "comm_bytes": total_bytes,
+            "comm_bytes_dense": total_dense,
+            # effective per-step compression ratio over both edge classes
+            "comm_compression": jnp.where(
+                total_bytes > 0, total_dense / jnp.maximum(total_bytes, 1.0),
+                jnp.float32(1.0),
+            ),
         }
         if self.elastic is not None:
             metrics["present_count"] = jnp.sum(present_g)

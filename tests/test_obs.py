@@ -1,0 +1,340 @@
+"""Telemetry acceptance tests (repro.obs, DESIGN.md §11).
+
+Invariants:
+  OBS1  ring fidelity: MetricsBuffer.flush() decodes bitwise what
+        per-step host reads of the same metric scalars would have seen
+        (f32 ring, one bulk transfer — no precision or ordering drift).
+  OBS2  donation transparency: history and sink records are identical
+        under donate=True and donate=False (excluding the host wall-clock
+        throughput fields) — telemetry is step output, never a read of a
+        donated input.
+  OBS3  sync discipline: the number of device->host transfers equals the
+        number of log_every-boundary flushes plus the final flush —
+        telemetry adds NO host syncs between boundaries.
+  OBS4  resume: restoring a checkpoint and rerunning with the same
+        run_dir APPENDS to the same run log; meta_step stays strictly
+        increasing across the resume manifest, and the stream validates
+        against tools/telemetry_schema.json.
+  OBS5  health metrics: flat/hier emit consensus_dist, gossip emits
+        mixing_spectral_gap (validated against numpy eigenvalues), every
+        averaging run emits loss_spread and comm byte counters.
+  OBS6  the schema checker: accepts the logs this repo writes, rejects
+        unknown fields, missing fields, and non-monotone meta_step.
+"""
+import importlib.util
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (
+    CommConfig,
+    MAvgConfig,
+    ObsConfig,
+    TopologyConfig,
+    TrainConfig,
+)
+from repro.core.trainer import Trainer
+from repro.models.simple import mlp_init, mlp_loss
+from repro.obs import MetricsBuffer, metric_keys, write_row
+
+D, C, H = 8, 4, 16
+L, K, B = 4, 2, 4
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+# host-side wall-clock fields — legitimately differ between runs
+TIME_KEYS = ("meta_steps_per_sec", "samples_per_sec", "elapsed_s")
+
+
+def _check_telemetry():
+    spec = importlib.util.spec_from_file_location(
+        "check_telemetry", os.path.join(_ROOT, "tools", "check_telemetry.py")
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _batch_fn(rng, step):
+    kx, ky = jax.random.split(rng)
+    return {
+        "x": jax.random.normal(kx, (L, K, B, D)),
+        "y": jax.random.randint(ky, (L, K, B), 0, C),
+    }
+
+
+def _trainer(tmp_path=None, *, donate=True, sink="memory", topology=None,
+             log_every=2, checkpoint=False, run_dir=None, **obs_kw):
+    mcfg = MAvgConfig(
+        algorithm="mavg", num_learners=L, k_steps=K, learner_lr=0.1,
+        momentum=0.6, donate=donate,
+        **({"topology": topology} if topology else {}),
+    )
+    if run_dir is None and sink in ("jsonl", "csv"):
+        run_dir = str(tmp_path / "run")
+    cfg = TrainConfig(
+        model=None, mavg=mcfg, batch_per_learner=B, meta_steps=8,
+        log_every=log_every,
+        checkpoint_dir=str(tmp_path / "ckpt") if checkpoint else None,
+        checkpoint_every=2 if checkpoint else 0,
+        obs=ObsConfig(sink=sink, run_dir=run_dir, **obs_kw),
+    )
+    return Trainer(
+        cfg, mlp_loss,
+        init_params_fn=lambda rng: mlp_init(rng, D, H, C),
+        batch_fn=_batch_fn,
+    )
+
+
+# ---------------------------------------------------------------------------
+# OBS1: flush decodes bitwise what per-step reads would have seen
+# ---------------------------------------------------------------------------
+
+
+def test_obs1_ring_flush_bitwise_vs_per_step_reads():
+    rng = np.random.RandomState(3)
+    rows = [
+        {"loss": jnp.float32(rng.randn()), "gnorm": jnp.float32(rng.randn())}
+        for _ in range(5)
+    ]
+    keys = metric_keys(rows[0])
+    mb = MetricsBuffer(keys, capacity=5)
+    for i, m in enumerate(rows):
+        mb.append(m, step=i)
+    flushed = mb.flush()
+    assert mb.host_syncs == 1
+    assert [r["meta_step"] for r in flushed] == list(range(5))
+    for rec, m in zip(flushed, rows):
+        for k in keys:
+            # the per-step read oracle: f32 on device -> python float
+            assert rec[k] == float(jnp.float32(m[k])), k
+
+
+def test_obs1_write_row_in_jit_matches_append():
+    keys = ("a", "b")
+    mb1 = MetricsBuffer(keys, capacity=3)
+    mb2 = MetricsBuffer(keys, capacity=3)
+    fn = jax.jit(lambda buf, row, a, b: write_row(
+        buf, row, {"a": a, "b": b}, keys))
+    for i in range(3):
+        a, b = jnp.float32(i + 0.5), jnp.float32(-i)
+        mb1.note(i, fn(mb1.buf, mb1.row_index(), a, b))
+        mb2.append({"a": a, "b": b}, step=i)
+    r1, r2 = mb1.flush(), mb2.flush()
+    assert r1 == r2
+
+
+def test_obs1_overflow_guard():
+    mb = MetricsBuffer(("a",), capacity=2)
+    mb.append({"a": jnp.float32(1)}, step=0)
+    mb.append({"a": jnp.float32(2)}, step=1)
+    with pytest.raises(RuntimeError):
+        mb.append({"a": jnp.float32(3)}, step=2)
+    assert len(mb.flush()) == 2
+
+
+# ---------------------------------------------------------------------------
+# OBS2: donate=True == donate=False history and sink records
+# ---------------------------------------------------------------------------
+
+
+def test_obs2_history_and_sink_parity_across_donation(tmp_path):
+    hists, sinks = {}, {}
+    for donate in (False, True):
+        tr = _trainer(tmp_path / str(donate), donate=donate, sink="memory")
+        hists[donate] = tr.run(8, log=None)
+        sinks[donate] = tr._sink.records
+
+    def strip(recs):
+        return [{k: v for k, v in r.items() if k not in TIME_KEYS}
+                for r in recs]
+
+    assert strip(hists[False]) == strip(hists[True])
+    assert strip(sinks[False]) == strip(sinks[True])
+    # same records through both paths (sink sees what history sees)
+    assert strip(hists[True]) == strip(sinks[True])
+
+
+# ---------------------------------------------------------------------------
+# OBS3: host syncs == boundary flushes + the final flush, nothing else
+# ---------------------------------------------------------------------------
+
+
+def test_obs3_sync_count_with_logging(tmp_path):
+    tr = _trainer(tmp_path, sink="memory", log_every=4)
+    tr.run(8, log=lambda *_: None)
+    # boundaries at steps 0 and 4 + the finally flush of steps 5..7
+    assert tr._mb.host_syncs == 3
+    assert len(tr.history) == 8
+
+
+def test_obs3_sync_count_silent_run(tmp_path):
+    # log=None: only ring-capacity flushes + the final flush ever sync
+    tr = _trainer(tmp_path, sink="memory", log_every=4)
+    tr.run(8, log=None)
+    # capacity = log_every = 4: forced flush when full at step 4, final
+    # flush of steps 4..7 -> exactly 2 transfers for 8 steps
+    assert tr._mb.host_syncs == 2
+    assert [r["meta_step"] for r in tr.history] == list(range(8))
+
+
+def test_obs3_throughput_fields(tmp_path):
+    tr = _trainer(tmp_path, sink="memory", log_every=2)
+    hist = tr.run(4, log=lambda *_: None)
+    for r in hist:
+        assert r["meta_steps_per_sec"] > 0
+        assert r["samples_per_sec"] == pytest.approx(
+            r["meta_steps_per_sec"] * L * K * B)
+        assert r["elapsed_s"] > 0
+        assert r["samples"] == (r["meta_step"] + 1) * L * K * B
+
+
+# ---------------------------------------------------------------------------
+# OBS4: resume appends to the same run log, monotone meta_step
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_obs4_resume_appends_same_run_log(tmp_path):
+    run_dir = str(tmp_path / "run")
+    tr = _trainer(tmp_path, sink="jsonl", run_dir=run_dir, checkpoint=True)
+    tr.run(4, log=None)
+    tr.close()
+
+    from repro.checkpoint import latest_checkpoint
+
+    tr2 = _trainer(tmp_path, sink="jsonl", run_dir=run_dir, checkpoint=True)
+    tr2.restore(latest_checkpoint(str(tmp_path / "ckpt")))
+    tr2.run(4, log=None)
+    tr2.close()
+
+    path = os.path.join(run_dir, "run.jsonl")
+    recs = [json.loads(l) for l in open(path)]
+    manifests = [r for r in recs if r["kind"] == "manifest"]
+    steps = [r["meta_step"] for r in recs if r["kind"] == "step"]
+    assert len(manifests) == 2  # one per (re)open
+    assert steps == sorted(steps) and len(set(steps)) == len(steps)
+    assert steps[0] == 0 and steps[-1] == 7
+    # checkpoint directory carries the manifest sidecar
+    assert os.path.exists(tmp_path / "ckpt" / "manifest.json")
+
+    ct = _check_telemetry()
+    schema = ct.load_schema(os.path.join(_ROOT, "tools",
+                                         "telemetry_schema.json"))
+    assert ct.check_file(path, schema) == []
+
+
+# ---------------------------------------------------------------------------
+# OBS5: topology health metrics
+# ---------------------------------------------------------------------------
+
+
+def test_obs5_flat_metrics_present(tmp_path):
+    tr = _trainer(tmp_path, sink="memory")
+    hist = tr.run(2, log=None)
+    for key in ("loss", "grad_norm", "loss_spread", "consensus_dist",
+                "displacement_norm", "v_norm", "comm_bytes",
+                "comm_bytes_dense", "comm_compression"):
+        assert key in hist[0], key
+    assert hist[0]["loss_spread"] >= 0
+    assert hist[0]["consensus_dist"] > 0  # K local steps drove them apart
+    assert hist[0]["comm_compression"] == pytest.approx(1.0)  # dense
+
+
+def test_obs5_hierarchical_consensus(tmp_path):
+    topo = TopologyConfig(kind="hierarchical", groups=2, outer_every=2)
+    tr = _trainer(tmp_path, sink="memory", topology=topo)
+    hist = tr.run(2, log=None)
+    assert "consensus_dist" in hist[0]
+    assert "comm_bytes_inter" in hist[0] and "comm_bytes_intra" in hist[0]
+
+
+def test_obs5_gossip_spectral_gap_matches_numpy(tmp_path):
+    topo = TopologyConfig(kind="gossip", graph="ring")
+    tr = _trainer(tmp_path, sink="memory", topology=topo)
+    hist = tr.run(2, log=None)
+    from repro.topology.gossip import mixing_matrix
+
+    W = np.asarray(mixing_matrix("ring", L, 0))
+    lam = np.sort(np.linalg.eigvalsh(W))
+    expect = 1.0 - lam[-2]
+    assert hist[0]["mixing_spectral_gap"] == pytest.approx(expect, rel=1e-5)
+
+
+def test_obs5_spectral_gap_masked_identity_rows():
+    from repro.topology.elastic import mask_mixing_matrix
+    from repro.topology.gossip import mixing_matrix, spectral_gap
+
+    W = mixing_matrix("complete", 4, 0)
+    mask = jnp.asarray([1.0, 1.0, 0.0, 1.0])
+    Wm = mask_mixing_matrix(W, mask)
+    # absent learner -> identity row; undeflated, eigenvalue 1 has
+    # multiplicity 2 and the gap would always read 0 under churn
+    gap = float(spectral_gap(Wm, mask))
+    # numpy oracle: the gap of the present 3x3 mixing block (the masked
+    # matrix keeps original edge weights, removed mass on the diagonal)
+    present = np.ix_([0, 1, 3], [0, 1, 3])
+    lam = np.sort(np.linalg.eigvalsh(np.asarray(Wm)[present]))
+    assert lam[-1] == pytest.approx(1.0, abs=1e-6)  # doubly stochastic
+    assert gap == pytest.approx(1.0 - lam[-2], abs=1e-5)
+    # undeflated gap over the full masked matrix reads 0 — the failure
+    # mode the deflation exists to avoid
+    assert float(spectral_gap(Wm)) == pytest.approx(0.0, abs=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# OBS6: the schema checker itself
+# ---------------------------------------------------------------------------
+
+
+def _valid_lines(tmp_path):
+    run_dir = str(tmp_path / "run")
+    tr = _trainer(tmp_path, sink="jsonl", run_dir=run_dir)
+    tr.run(3, log=None)
+    tr.close()
+    return open(os.path.join(run_dir, "run.jsonl")).read().splitlines()
+
+
+def test_obs6_checker_accepts_and_rejects(tmp_path):
+    ct = _check_telemetry()
+    schema = ct.load_schema(os.path.join(_ROOT, "tools",
+                                         "telemetry_schema.json"))
+    lines = _valid_lines(tmp_path)
+    assert ct.check_stream(lines, schema) == []
+
+    # unknown field fails
+    bad = json.loads(lines[1])
+    bad["totally_new_metric"] = 1.0
+    errs = ct.check_stream([lines[0], json.dumps(bad)], schema)
+    assert any("unknown" in e for e in errs)
+
+    # missing required field fails
+    bad = json.loads(lines[1])
+    del bad["loss"]
+    errs = ct.check_stream([lines[0], json.dumps(bad)], schema)
+    assert any("missing" in e for e in errs)
+
+    # non-monotone meta_step fails
+    errs = ct.check_stream([lines[0], lines[2], lines[1]], schema)
+    assert any("monotone" in e for e in errs)
+
+    # step before manifest fails
+    errs = ct.check_stream([lines[1]], schema)
+    assert any("before any manifest" in e for e in errs)
+
+
+def test_obs6_csv_sink(tmp_path):
+    run_dir = str(tmp_path / "run")
+    tr = _trainer(tmp_path, sink="csv", run_dir=run_dir)
+    tr.run(3, log=None)
+    tr.close()
+    import csv
+
+    path = os.path.join(run_dir, "run.csv")
+    rows = list(csv.DictReader(open(path)))
+    assert len(rows) == 3
+    assert "loss" in rows[0]
+    assert os.path.exists(path + ".manifest.json")

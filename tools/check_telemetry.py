@@ -1,0 +1,141 @@
+#!/usr/bin/env python
+"""Validate a ``repro.obs`` JSONL run log against the checked-in schema.
+
+Usage:
+  python tools/check_telemetry.py RUN.jsonl [RUN2.jsonl ...]
+      [--schema tools/telemetry_schema.json]
+
+The stream contract (DESIGN.md §11, src/repro/obs/sink.py):
+
+* every line is one JSON object with a ``kind`` tag — ``manifest``
+  (run identity), ``step`` (per-meta-step trainer telemetry) or ``row``
+  (free-form benchmark result);
+* a manifest precedes the first step record (resume appends another
+  manifest mid-stream — allowed anywhere);
+* step records carry the full core field set, plus the averaging-family
+  fields when the governing manifest's ``algorithm`` is an averaging
+  algorithm; UNKNOWN fields fail (a typo'd or renamed metric must not
+  silently fork the schema — add it to telemetry_schema.json instead);
+* ``meta_step`` is strictly increasing across the whole file, including
+  across resume manifests (one run log = one monotone trajectory).
+
+Exit status 0 = valid; non-zero prints one line per violation.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# mirror of repro.configs.base.AVERAGING_ALGOS — this tool runs without
+# PYTHONPATH=src (CI validates artifacts with a bare python invocation)
+AVERAGING_ALGOS = ("mavg", "kavg", "sync", "mavg_mlocal")
+
+DEFAULT_SCHEMA = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "telemetry_schema.json"
+)
+
+KINDS = ("manifest", "step", "row")
+
+
+def load_schema(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_stream(lines, schema, *, name: str = "<stream>") -> list[str]:
+    """All schema violations in one pass (empty list = valid)."""
+    errs: list[str] = []
+    step_req = set(schema["step_required"])
+    step_avg = set(schema["step_required_averaging"])
+    step_known = step_req | step_avg | set(schema["step_optional"])
+    man_req = set(schema["manifest_required"])
+    man_trainer = set(schema["manifest_required_trainer"])
+
+    n_manifests = 0
+    algorithm = None
+    last_step = None
+    for i, line in enumerate(lines, 1):
+        line = line.strip()
+        if not line:
+            continue
+        where = f"{name}:{i}"
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            errs.append(f"{where}: not valid JSON ({e})")
+            continue
+        if not isinstance(rec, dict):
+            errs.append(f"{where}: not a JSON object")
+            continue
+        kind = rec.get("kind")
+        if kind not in KINDS:
+            errs.append(f"{where}: unknown kind {kind!r} (want one of {KINDS})")
+            continue
+        if kind == "manifest":
+            n_manifests += 1
+            missing = man_req - set(rec)
+            # bench manifests (suite set) carry environment only; trainer
+            # manifests also carry the run config / topology identity
+            if "suite" not in rec:
+                missing |= man_trainer - set(rec)
+                algorithm = rec.get("algorithm")
+            if missing:
+                errs.append(
+                    f"{where}: manifest missing fields {sorted(missing)}"
+                )
+        elif kind == "step":
+            if n_manifests == 0:
+                errs.append(f"{where}: step record before any manifest")
+            req = set(step_req)
+            if algorithm in AVERAGING_ALGOS:
+                req |= step_avg
+            missing = req - set(rec)
+            if missing:
+                errs.append(f"{where}: step missing fields {sorted(missing)}")
+            unknown = set(rec) - step_known
+            if unknown:
+                errs.append(
+                    f"{where}: step has unknown fields {sorted(unknown)} — "
+                    f"extend tools/telemetry_schema.json if intentional"
+                )
+            s = rec.get("meta_step")
+            if isinstance(s, (int, float)):
+                if last_step is not None and s <= last_step:
+                    errs.append(
+                        f"{where}: meta_step {s} not > previous {last_step} "
+                        f"(one run log must be one monotone trajectory)"
+                    )
+                last_step = s
+        # kind == "row": bench rows are suite-specific, not field-checked
+    if n_manifests == 0:
+        errs.append(f"{name}: no manifest record in stream")
+    return errs
+
+
+def check_file(path: str, schema: dict) -> list[str]:
+    with open(path) as f:
+        return check_stream(f, schema, name=path)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="+", help="JSONL run logs to validate")
+    ap.add_argument("--schema", default=DEFAULT_SCHEMA)
+    args = ap.parse_args(argv)
+
+    schema = load_schema(args.schema)
+    errs: list[str] = []
+    for path in args.files:
+        errs += check_file(path, schema)
+    for e in errs:
+        print(e, file=sys.stderr)
+    if not errs:
+        print(f"ok: {len(args.files)} file(s) valid "
+              f"(schema_version {schema['schema_version']})")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
