@@ -1,8 +1,6 @@
 """Shared helpers for the benchmark harness."""
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 
@@ -88,9 +86,15 @@ def write_rows(path: str, rows: list, suite: str) -> str:
 
 
 def timeit(fn, *args, iters: int = 10, warmup: int = 2):
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+    """Median wall-clock of ``fn(*args)`` in µs, through the shared
+    steady-state harness (obs.profile: warmup, block_until_ready,
+    median-of-N). Use ``steady(...)`` when the IQR noise bar is wanted
+    too — every reported bench number shares one methodology."""
+    return steady(fn, *args, iters=iters, warmup=warmup).median_us
+
+
+def steady(fn, *args, iters: int = 10, warmup: int = 2):
+    """The full ``obs.profile.Timing`` (median + IQR) of ``fn(*args)``."""
+    from repro.obs.profile import steady_timeit
+
+    return steady_timeit(fn, *args, iters=iters, warmup=warmup)

@@ -50,7 +50,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import timeit
+from benchmarks.common import steady
 from repro.configs.base import CommConfig, MAvgConfig, TopologyConfig
 from repro.core.meta import init_state, make_meta_step
 from repro.models.simple import mlp_init, mlp_loss
@@ -359,16 +359,47 @@ def timing(quick: bool) -> list[dict]:
         state = init_state(params, cfg)
         step = jax.jit(make_meta_step(mlp_loss, cfg))
         b = _batches(0, P, 2)
-        times[packed] = timeit(lambda s: step(s, b)[0], state,
+        times[packed] = steady(lambda s: step(s, b)[0], state,
                                iters=5, warmup=2)
+        t = times[packed]
         print(f"pack,meta_step_xla_cpu_us,"
-              f"{'packed' if packed else 'per_leaf'},{times[packed]:.0f}")
+              f"{'packed' if packed else 'per_leaf'},"
+              f"{t.median_us:.0f}±{t.iqr_us:.0f}")
     rows.append({
         "kind": "pack_timing_xla_cpu", "n_leaves": spec.num_leaves,
-        "meta_step_us_per_leaf": times[False],
-        "meta_step_us_packed": times[True],
-        "packed_over_per_leaf": times[True] / times[False],
+        "meta_step_us_per_leaf": times[False].median_us,
+        "meta_step_us_packed": times[True].median_us,
+        "meta_step_iqr_us_per_leaf": times[False].iqr_us,
+        "meta_step_iqr_us_packed": times[True].iqr_us,
+        "packed_over_per_leaf": (
+            times[True].median_us / times[False].median_us
+        ),
     })
+    return rows
+
+
+def phase_attribution(quick: bool) -> list[dict]:
+    """Measured-vs-modeled attribution of the training phases: whole
+    jitted step vs local phase vs meta mix, on the packed MLP config
+    (obs.profile.profile_phases — steady-state timing joined against the
+    compiled-HLO modeled bytes). The split the K/μ autotuner consumes:
+    on what fraction of the step does raising K actually save time?"""
+    from repro.obs.profile import measured_peak_gbps, profile_phases
+
+    cfg = MAvgConfig(algorithm="mavg", num_learners=P, k_steps=2,
+                     learner_lr=0.2, momentum=MU)
+    params = mlp_init(jax.random.PRNGKey(0), D, H, C)
+    state = init_state(params, cfg)
+    iters, warmup = (5, 2) if quick else (10, 3)
+    rows = profile_phases(
+        mlp_loss, cfg, state, _batches(0, P, 2),
+        iters=iters, warmup=warmup, peak_gbps=measured_peak_gbps(),
+    )
+    for r in rows:
+        print(f"pack,attr,{r['op']},{r['median_us']:.1f}"
+              f"±{r['iqr_us']:.1f}us,"
+              f"{r['achieved_gbps']:.2f}GB/s,"
+              f"{r['pct_of_bound']:.0f}%of_bound")
     return rows
 
 
@@ -378,6 +409,7 @@ def main(quick: bool = False, json_path: str | None = None):
     rows += launches(quick)
     rows += hbm_table(quick)
     rows += timing(quick)
+    rows += phase_attribution(quick)
     if json_path:
         from benchmarks.common import write_rows
 

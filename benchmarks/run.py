@@ -14,6 +14,11 @@
 Prints ``name,...`` CSV lines. ``--quick`` shrinks steps/seeds (default
 here so `python -m benchmarks.run` finishes on CPU in ~15 min); pass
 ``--full`` for the EXPERIMENTS.md-grade numbers.
+
+Every suite's result rows are also appended to a per-suite trajectory
+store ``<bench-dir>/BENCH_<suite>.json`` (obs.baseline) — the cross-run
+history ``tools/bench_compare.py`` gates against the committed baselines
+in ``benchmarks/expected/``. ``--bench-dir ''`` disables the append.
 """
 from __future__ import annotations
 
@@ -26,9 +31,17 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="explicit form of the default (smoke-sized "
+                         "suites); mutually exclusive with --full")
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset: convergence mu_p k baselines kernel comm topology elastic pack roofline")
+    ap.add_argument("--bench-dir", default="bench_out",
+                    help="directory of the BENCH_<suite>.json trajectory "
+                         "stores ('' = don't append)")
     args = ap.parse_args()
+    if args.full and args.quick:
+        ap.error("--full and --quick are mutually exclusive")
     quick = not args.full
 
     from benchmarks import (
@@ -74,6 +87,24 @@ def main() -> None:
                    and r.get("ok") is False]
             if bad:
                 raise SystemExit(f"{len(bad)} cell(s) not ok")
+            if args.bench_dir and rows:
+                from repro.obs.baseline import (
+                    append_trajectory, trajectory_path,
+                )
+
+                # the envelope convention of benchmarks/common.write_rows:
+                # bench-local "kind" taxonomies ride as "row_kind"
+                recs = []
+                for r in rows:
+                    if not isinstance(r, dict):
+                        continue
+                    rec = dict(r)
+                    if rec.get("kind") not in (None, "row"):
+                        rec["row_kind"] = rec.pop("kind")
+                    recs.append({"kind": "row", **rec})
+                path = trajectory_path(args.bench_dir, name)
+                append_trajectory(path, name, recs)
+                print(f"bench,{name},trajectory,{path}")
             print(f"bench,{name},{(time.time() - t0) * 1e6:.0f},ok")
         except (Exception, SystemExit) as e:
             # SystemExit is how benches signal failed cells from main();

@@ -441,6 +441,20 @@ class ObsConfig:
                      peak-state / flops numbers (roofline.hlo_cost
                      .jit_cost) into the run manifest — one extra AOT
                      compile of the step at first dispatch
+    health           run-health watchdogs (obs.health): declarative rules
+                     evaluated over each flushed metric window, emitting
+                     structured ``alert`` records into the sink. Consumes
+                     only already-flushed host floats — a healthy run is
+                     bitwise unaffected (pinned in tests)
+    health_halt      fatal rules (NaN loss, divergence) halt the run with
+                     a resumable checkpoint + HealthHalt; False records
+                     the alerts but never stops
+    attribution      measured-vs-modeled phase attribution (obs.profile):
+                     at init, steady-state-time the jitted step / local
+                     phase / meta mix against their compiled-HLO modeled
+                     bytes and record achieved-GB/s rows into the sink —
+                     a few extra untimed compiles + timing iterations
+                     before step 0, nothing in the loop
     """
 
     sink: str = "none"
@@ -449,6 +463,9 @@ class ObsConfig:
     trace: bool = False
     profiler: bool = False
     cost_analysis: bool = False
+    health: bool = False
+    health_halt: bool = True
+    attribution: bool = False
 
     def __post_init__(self):
         assert self.sink in OBS_SINKS, (

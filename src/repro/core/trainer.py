@@ -27,8 +27,10 @@ from repro.checkpoint import load_state, save_state
 from repro.configs.base import MAvgConfig, TrainConfig
 from repro.core.meta import init_state, make_meta_step
 from repro.obs import (
+    HealthHalt,
     MetricsBuffer,
     Tracer,
+    make_monitor,
     make_sink,
     metric_keys,
     run_manifest,
@@ -78,6 +80,13 @@ class Trainer:
         self.tracer = Tracer(self.obs_cfg.trace)
         self._restored = False
         self.history: list[dict] = []
+        # health watchdogs (obs.health): consume only flushed host
+        # floats, so a healthy run is bitwise identical with them on
+        self._monitor = (
+            make_monitor(halt=self.obs_cfg.health_halt)
+            if self.obs_cfg.health else None
+        )
+        self.attribution: list[dict] = []
 
     # ------------------------------------------------------------------
     # telemetry assembly (lazy, once per Trainer)
@@ -148,6 +157,23 @@ class Trainer:
                 obs.sink, obs.run_dir, resume=self._restored
             )
             self._sink.open_run(self.manifest)
+        if obs.attribution:
+            # measured-vs-modeled phase attribution, once before step 0:
+            # functional (non-donated) copies of the step/phases are
+            # steady-state timed and joined against their compiled-HLO
+            # modeled bytes — the training state is untouched
+            from repro.obs import measured_peak_gbps, profile_phases
+
+            try:
+                self.attribution = profile_phases(
+                    self.loss_fn, self.mcfg, self.state, batches, lr,
+                    iters=5, warmup=2, peak_gbps=measured_peak_gbps(),
+                )
+            except Exception:  # attribution is best-effort telemetry
+                self.attribution = []
+            if self._sink is not None:
+                for row in self.attribution:
+                    self._sink.append(row)
 
     # ------------------------------------------------------------------
     # driving loop
@@ -200,66 +226,101 @@ class Trainer:
                 r["samples_per_sec"] = msps * samples_per_meta
                 r["elapsed_s"] = now - run_t0
                 self.history.append(r)
+            alerts = (
+                self._monitor.observe(recs) if self._monitor is not None
+                else ()
+            )
             if self._sink is not None:
                 with self.tracer.span("obs.sink_append"):
                     for r in recs:
                         self._sink.append(r)
+                    for a in alerts:
+                        self._sink.append(a)
                     self._sink.flush()
 
-        if self.obs_cfg.profiler and self.obs_cfg.run_dir:
-            self.tracer.profiler_start(
-                os.path.join(self.obs_cfg.run_dir, "jax_trace")
+        def maybe_halt(step):
+            # raised ONLY from in-loop flush boundaries (never from the
+            # finally-flush — a halt must not mask a real traceback or
+            # fire after the loop already ended)
+            if self._monitor is None or not self._monitor.halt_requested:
+                return
+            alert = self._monitor.halt_alert
+            ckpt_dir = self.cfg.checkpoint_dir or (
+                os.path.join(self.obs_cfg.run_dir, "halt_ckpt")
+                if self.obs_cfg.run_dir else None
             )
-        try:
-            for i in range(n):
-                step = start + i
-                rng = jax.random.fold_in(self.data_rng, step)
-                batches = self.batch_fn(rng, step)
-                lr = (
-                    self.lr_schedule(step)
-                    if self.lr_schedule
-                    else jnp.float32(self.mcfg.learner_lr)
-                )
-                if self._mb is None:
-                    self._init_obs(batches, lr)
-                if self._mb.full:  # ring smaller than the log window
-                    flush()
-                with self.tracer.span("obs.dispatch"):
-                    self.state, ring = self._fused(
-                        self.state, batches, lr,
-                        self._mb.buf, self._mb.row_index(),
+            path = None
+            if ckpt_dir:
+                with self.tracer.span("obs.checkpoint_io"):
+                    path = save_state(
+                        ckpt_dir, self.state, step + 1,
+                        manifest=self.manifest,
                     )
-                self._mb.note(step, ring)
-                if log and (step % self.cfg.log_every == 0):
-                    flush()
-                    m = self.history[-1]
-                    log(
-                        f"[{self.mcfg.algorithm}] meta_step={step} "
-                        f"loss={m['loss']:.4f} "
-                        f"gnorm={m.get('grad_norm', 0):.3f} "
-                        f"{m['meta_steps_per_sec']:.2f} steps/s "
-                        f"{m['samples_per_sec']:.0f} samples/s "
-                        f"({time.time() - run_t0:.1f}s)"
+            raise HealthHalt(alert, path)
+
+        # trace/profiler lifecycle is exception-safe: the session closes
+        # open spans, stops the profiler and exports the Chrome trace on
+        # ANY exit — including the final flush below, whose spans land in
+        # the exported file
+        run_dir = self.obs_cfg.run_dir
+        export_path = (
+            os.path.join(run_dir, "trace.json")
+            if self.obs_cfg.trace and run_dir else None
+        )
+        profiler_dir = (
+            os.path.join(run_dir, "jax_trace")
+            if self.obs_cfg.profiler and run_dir else None
+        )
+        with self.tracer.session(export_path, profiler_dir):
+            try:
+                for i in range(n):
+                    step = start + i
+                    rng = jax.random.fold_in(self.data_rng, step)
+                    batches = self.batch_fn(rng, step)
+                    lr = (
+                        self.lr_schedule(step)
+                        if self.lr_schedule
+                        else jnp.float32(self.mcfg.learner_lr)
                     )
-                if (
-                    self.cfg.checkpoint_dir
-                    and self.cfg.checkpoint_every
-                    and (step + 1) % self.cfg.checkpoint_every == 0
-                ):
-                    with self.tracer.span("obs.checkpoint_io"):
-                        save_state(
-                            self.cfg.checkpoint_dir, self.state, step + 1,
-                            manifest=self.manifest,
+                    if self._mb is None:
+                        self._init_obs(batches, lr)
+                    if self._mb.full:  # ring smaller than the log window
+                        flush()
+                        maybe_halt(step - 1)
+                    with self.tracer.span("obs.dispatch"):
+                        self.state, ring = self._fused(
+                            self.state, batches, lr,
+                            self._mb.buf, self._mb.row_index(),
                         )
-        finally:
-            flush()  # metrics of completed steps survive an interrupt
-            if self._sink is not None:
-                self._sink.flush()
-            self.tracer.profiler_stop()
-            if self.obs_cfg.trace and self.obs_cfg.run_dir:
-                self.tracer.export_chrome_trace(
-                    os.path.join(self.obs_cfg.run_dir, "trace.json")
-                )
+                    self._mb.note(step, ring)
+                    if log and (step % self.cfg.log_every == 0):
+                        flush()
+                        maybe_halt(step)
+                        m = self.history[-1]
+                        log(
+                            f"[{self.mcfg.algorithm}] meta_step={step} "
+                            f"loss={m['loss']:.4f} "
+                            f"gnorm={m.get('grad_norm', 0):.3f} "
+                            f"{m['meta_steps_per_sec']:.2f} steps/s "
+                            f"{m['samples_per_sec']:.0f} samples/s "
+                            f"({time.time() - run_t0:.1f}s)"
+                        )
+                    if (
+                        self.cfg.checkpoint_dir
+                        and self.cfg.checkpoint_every
+                        and (step + 1) % self.cfg.checkpoint_every == 0
+                    ):
+                        with self.tracer.span("obs.checkpoint_io"):
+                            save_state(
+                                self.cfg.checkpoint_dir, self.state, step + 1,
+                                manifest=self.manifest,
+                            )
+                flush()  # the final (possibly partial) log window
+                maybe_halt(start + n - 1)
+            finally:
+                flush()  # metrics of completed steps survive an interrupt
+                if self._sink is not None:
+                    self._sink.flush()
         return self.history
 
     def restore(self, path):

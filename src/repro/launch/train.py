@@ -99,6 +99,17 @@ def main() -> None:
     ap.add_argument("--obs-cost", action="store_true",
                     help="record the compiled meta step's measured HBM / "
                          "peak-state numbers in the run manifest")
+    ap.add_argument("--obs-health", action="store_true",
+                    help="run-health watchdogs over the flushed metric "
+                         "windows (obs.health): structured alerts in the "
+                         "run log, fatal rules halt with a resumable "
+                         "checkpoint")
+    ap.add_argument("--obs-no-halt", action="store_true",
+                    help="demote fatal health rules to warn: record "
+                         "alerts, never stop the run")
+    ap.add_argument("--obs-attribution", action="store_true",
+                    help="measured-vs-modeled phase attribution rows "
+                         "(obs.profile) recorded once before step 0")
     ap.add_argument("--resume", action="store_true",
                     help="restore the latest checkpoint from "
                          "--checkpoint-dir and append to the run log")
@@ -144,7 +155,10 @@ def main() -> None:
         checkpoint_every=10 if args.checkpoint_dir else 0,
         obs=ObsConfig(sink=args.obs_sink, run_dir=args.run_dir,
                       trace=args.trace, profiler=args.profiler,
-                      cost_analysis=args.obs_cost),
+                      cost_analysis=args.obs_cost,
+                      health=args.obs_health,
+                      health_halt=not args.obs_no_halt,
+                      attribution=args.obs_attribution),
     )
 
     def loss_fn(params, batch):

@@ -16,7 +16,35 @@ Three pieces, composable and individually optional:
 ``run_manifest`` (manifest.py) is the shared run-identity record: config,
 PackSpec hash, topology/reducer/elastic settings, jax/device info, and
 optionally the measured compiled-program cost (roofline.hlo_cost).
+
+PR 7 adds the measurement-and-judgment layer on top:
+
+* ``profile`` (profile.py): the steady-state timing harness every
+  reported number flows through (warmup, block_until_ready, median +
+  IQR) and the measured-vs-modeled attribution join against
+  ``roofline.hlo_cost`` (achieved HBM GB/s, % of the machine's measured
+  roofline bound).
+* ``baseline`` (baseline.py): per-suite ``BENCH_<suite>.json`` trajectory
+  stores + committed baseline specs; ``tools/bench_compare.py`` turns
+  them into the CI regression gate.
+* ``health`` (health.py): declarative run-health rules over flushed
+  metric windows -> structured ``alert`` records, with fatal rules
+  halting the Trainer on a resumable checkpoint (``HealthHalt``).
 """
+from repro.obs.baseline import (
+    append_trajectory,
+    compare,
+    latest_rows,
+    load_trajectory,
+    trajectory_path,
+)
+from repro.obs.health import (
+    DEFAULT_RULES,
+    HealthHalt,
+    HealthMonitor,
+    HealthRule,
+    make_monitor,
+)
 from repro.obs.manifest import (
     SCHEMA_VERSION,
     device_env,
@@ -24,6 +52,14 @@ from repro.obs.manifest import (
     run_manifest,
 )
 from repro.obs.metrics import MetricsBuffer, metric_keys, write_row
+from repro.obs.profile import (
+    Timing,
+    attribution_row,
+    measured_peak_gbps,
+    profile_fn,
+    profile_phases,
+    steady_timeit,
+)
 from repro.obs.sink import (
     SINKS,
     CsvSink,
@@ -35,18 +71,34 @@ from repro.obs.sink import (
 from repro.obs.trace import Tracer
 
 __all__ = [
+    "DEFAULT_RULES",
     "SCHEMA_VERSION",
     "SINKS",
     "CsvSink",
+    "HealthHalt",
+    "HealthMonitor",
+    "HealthRule",
     "JsonlSink",
     "MemorySink",
     "MetricsBuffer",
     "Sink",
+    "Timing",
     "Tracer",
+    "append_trajectory",
+    "attribution_row",
+    "compare",
     "device_env",
+    "latest_rows",
+    "load_trajectory",
+    "make_monitor",
     "make_sink",
+    "measured_peak_gbps",
     "metric_keys",
     "packspec_hash",
+    "profile_fn",
+    "profile_phases",
     "run_manifest",
+    "steady_timeit",
+    "trajectory_path",
     "write_row",
 ]

@@ -17,7 +17,11 @@ import time
 
 import jax
 
-SCHEMA_VERSION = 1
+# history: 1 = PR 6 (manifest/step/row kinds); 2 = PR 7 (adds the
+# ``alert`` and ``attribution`` record kinds — additive, so v1 readers
+# that skip unknown kinds still parse v2 streams, but a v1 VALIDATOR
+# must reject them: tools/check_telemetry.py gates on the major)
+SCHEMA_VERSION = 2
 
 
 def packspec_hash(spec) -> str | None:

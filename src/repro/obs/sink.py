@@ -62,6 +62,15 @@ class JsonlSink(Sink):
     ``resume=False`` truncates. The manifest is written as the first line
     of every (re)open so a reader can always recover the config that
     produced the records that follow it.
+
+    A killed run can leave a torn final line (a partial ``write`` that
+    never reached its newline). Appending after one would glue the
+    resumed run's manifest onto the fragment and corrupt the whole
+    stream, so resume first repairs the tail: if the last line is not a
+    complete JSON object, the file is truncated back to the last good
+    newline (``repaired_bytes`` records how much was dropped — at most
+    one record, which had no durable effect anyway since the run died
+    before checkpointing past it).
     """
 
     def __init__(self, path: str, *, resume: bool = False):
@@ -69,6 +78,9 @@ class JsonlSink(Sink):
         d = os.path.dirname(path)
         if d:
             os.makedirs(d, exist_ok=True)
+        self.repaired_bytes = 0
+        if resume and os.path.exists(path):
+            self.repaired_bytes = _repair_torn_tail(path)
         self._f = open(path, "a" if resume else "w")
 
     def open_run(self, manifest: dict) -> None:
@@ -127,6 +139,43 @@ class CsvSink(Sink):
     def close(self) -> None:
         if not self._f.closed:
             self._f.close()
+
+
+def _repair_torn_tail(path: str) -> int:
+    """Truncate a torn final line of a JSONL file; returns bytes dropped.
+
+    A line is torn when it lacks its trailing newline or does not parse
+    as a JSON object (a write cut mid-record). Scans backward from the
+    end to the last newline-terminated line that parses; everything after
+    it is truncated. An empty file (or one with no complete line at all)
+    is truncated to zero — the resumed open rewrites the manifest anyway.
+    """
+    size = os.path.getsize(path)
+    if size == 0:
+        return 0
+    with open(path, "rb") as f:
+        data = f.read()
+    good = len(data)
+    # an unterminated tail fragment is torn by definition
+    if not data.endswith(b"\n"):
+        good = data.rfind(b"\n") + 1  # 0 when no newline at all
+    # then walk back over newline-terminated lines that still don't parse
+    # (json.dumps output never contains a raw newline, so any unparseable
+    # complete line is corruption, not payload)
+    while good > 0:
+        prev = data.rfind(b"\n", 0, good - 1)
+        line = data[prev + 1: good - 1]
+        try:
+            if isinstance(json.loads(line.decode("utf-8")), dict):
+                break
+        except (ValueError, UnicodeDecodeError):
+            pass
+        good = prev + 1
+    dropped = size - good
+    if dropped:
+        with open(path, "rb+") as f:
+            f.truncate(good)
+    return dropped
 
 
 def _jsonify(x):

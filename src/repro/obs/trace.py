@@ -14,6 +14,13 @@ Disabled tracers cost one predicate per span — safe to leave in hot
 paths. ``export_chrome_trace`` writes the collected spans in the Chrome
 ``chrome://tracing`` / Perfetto JSON event format, no profiler plugin
 needed.
+
+Tracing is exception-safe: ``session`` is the context-manager form the
+Trainer wraps its whole run in — on ANY exit (normal, KeyboardInterrupt,
+a crash mid-span) it closes still-open spans (recorded with an
+``interrupted`` mark), stops a live device profile, and flushes the
+Chrome-trace file, so a crashed run still yields a loadable trace of
+everything up to the failure.
 """
 from __future__ import annotations
 
@@ -29,6 +36,13 @@ class Tracer:
         self.events: list[tuple[str, float, float]] = []  # (name, t0, dur) s
         self._t0 = time.perf_counter()
         self._profiling = False
+        # spans entered but not yet exited, as (name, t0) — a crash inside
+        # a span unwinds through span()'s finally, but a crash BETWEEN the
+        # profiler annotation setup and it, or a generator that is never
+        # resumed (GC'd mid-suspend), leaves entries here for
+        # close_open_spans to finalize
+        self._open: list[tuple[str, float]] = []
+        self.interrupted: list[str] = []  # names closed abnormally
 
     @contextmanager
     def span(self, name: str):
@@ -39,11 +53,59 @@ class Tracer:
         import jax
 
         t0 = time.perf_counter()
+        entry = (name, t0)
+        self._open.append(entry)
         try:
             with jax.profiler.TraceAnnotation(name):
                 yield
         finally:
+            if entry in self._open:
+                self._open.remove(entry)
             self.events.append((name, t0 - self._t0, time.perf_counter() - t0))
+
+    def close_open_spans(self) -> list[str]:
+        """Finalize every still-open span at the current wall clock.
+
+        Normally a no-op (span()'s finally pops the stack); after an
+        abnormal unwind it records each orphan as a complete event ending
+        now and returns the closed names (also kept in ``interrupted``).
+        """
+        now = time.perf_counter()
+        closed = []
+        while self._open:
+            name, t0 = self._open.pop()
+            self.events.append((name, t0 - self._t0, now - t0))
+            closed.append(name)
+        self.interrupted.extend(closed)
+        return closed
+
+    @contextmanager
+    def session(self, export_path: str | None = None,
+                profiler_dir: str | None = None):
+        """Exception-safe tracing scope around a whole run.
+
+        Enter: optionally starts a device profile into ``profiler_dir``.
+        Exit — ALWAYS, crash included: closes open spans, stops the
+        profiler, and (if ``export_path``) writes the Chrome trace, so
+        whatever was recorded before a failure is loadable. Export
+        errors are swallowed on the exception path only — telemetry must
+        not mask the real traceback.
+        """
+        if profiler_dir:
+            self.profiler_start(profiler_dir)
+        ok = False
+        try:
+            yield self
+            ok = True
+        finally:
+            self.close_open_spans()
+            self.profiler_stop()
+            if self.enabled and export_path:
+                try:
+                    self.export_chrome_trace(export_path)
+                except Exception:
+                    if ok:  # pragma: no cover - export itself failed
+                        raise
 
     # ------------------------------------------------------------------
     def summary(self) -> dict:

@@ -1,0 +1,238 @@
+"""Regression-sentinel acceptance tests (obs.baseline + tools/bench_compare).
+
+Invariants:
+  BCH1  trajectory stores: append-only JSONL, one point per run, newest
+        rows recoverable; a torn final line is skipped, not fatal.
+  BCH2  compare: values inside the acceptance interval pass; an injected
+        >=10% regression in measured kernel time OR peak-state bytes
+        fails against a tol_rel < 0.10 baseline (the acceptance pin of
+        PR 7); a metric whose selector matches no row is a violation
+        (vanished measurement); NaN is a violation.
+  BCH3  seed_spec fills relative baselines with the loosest honest value
+        per direction and leaves absolute bounds alone.
+  BCH4  the bench_compare CLI exits 0 on a healthy trajectory and 1 on a
+        regressed one, loading specs from the baselines directory; it is
+        importable and runnable without jax on the path.
+  BCH5  the committed benchmarks/expected/ specs select rows the suites
+        actually emit (field/selector spelling can't silently rot).
+"""
+import importlib.util
+import json
+import os
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load(name, *parts):
+    spec = importlib.util.spec_from_file_location(
+        name, os.path.join(_ROOT, *parts))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+bl = _load("obs_baseline", "src", "repro", "obs", "baseline.py")
+bc = _load("bench_compare", "tools", "bench_compare.py")
+
+
+ROWS = [
+    {"kind": "row", "row_kind": "attribution", "op": "pack_update",
+     "median_us": 1000.0, "achieved_gbps": 20.0},
+    {"kind": "row", "row_kind": "hbm_peak_state", "arch": "llama3-405b",
+     "peak_donated_bytes": 1.0e12, "ratio": 0.55},
+]
+
+SPEC = {
+    "suite": "pack",
+    "metrics": [
+        {"name": "kernel time", "field": "median_us",
+         "select": {"row_kind": "attribution", "op": "pack_update"},
+         "baseline": 1000.0, "tol_rel": 0.05, "direction": "min"},
+        {"name": "peak state bytes", "field": "peak_donated_bytes",
+         "select": {"row_kind": "hbm_peak_state"},
+         "baseline": 1.0e12, "tol_rel": 0.05, "direction": "min"},
+        {"name": "peak ratio", "field": "ratio",
+         "select": {"row_kind": "hbm_peak_state"}, "max": 0.6},
+    ],
+}
+
+
+def _mutate(rows, row_kind, field, factor):
+    out = []
+    for r in rows:
+        r = dict(r)
+        if r.get("row_kind") == row_kind:
+            r[field] = r[field] * factor
+        out.append(r)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# BCH1: trajectory stores
+# ---------------------------------------------------------------------------
+
+
+def test_bch1_append_and_load_roundtrip(tmp_path):
+    path = bl.trajectory_path(str(tmp_path), "pack")
+    assert path.endswith("BENCH_pack.json")
+    bl.append_trajectory(path, "pack", ROWS, manifest={"backend": "cpu"},
+                         created_unix=100.0)
+    bl.append_trajectory(path, "pack",
+                         _mutate(ROWS, "attribution", "median_us", 2.0),
+                         manifest={"backend": "cpu"}, created_unix=200.0)
+    pts = bl.load_trajectory(path)
+    assert len(pts) == 2
+    assert [p["created_unix"] for p in pts] == [100.0, 200.0]
+    assert pts[0]["manifest"] == {"backend": "cpu"}
+    latest = bl.latest_rows(path, suite="pack")
+    assert latest[0]["median_us"] == 2000.0  # newest point wins
+    assert bl.latest_rows(path, suite="other") == []
+
+
+def test_bch1_torn_tail_is_skipped(tmp_path):
+    path = bl.trajectory_path(str(tmp_path), "pack")
+    bl.append_trajectory(path, "pack", ROWS, manifest={})
+    with open(path, "a") as f:
+        f.write('{"kind": "trajectory", "suite": "pack", "rows": [{"tr')
+    pts = bl.load_trajectory(path)
+    assert len(pts) == 1
+    assert bl.latest_rows(path)[0]["row_kind"] == "attribution"
+
+
+# ---------------------------------------------------------------------------
+# BCH2: compare — the acceptance pin
+# ---------------------------------------------------------------------------
+
+
+def test_bch2_healthy_rows_pass():
+    assert bl.compare(ROWS, SPEC) == []
+    # 4% over a 5% tolerance still passes
+    assert bl.compare(_mutate(ROWS, "attribution", "median_us", 1.04),
+                      SPEC) == []
+
+
+def test_bch2_ten_pct_kernel_time_regression_fails():
+    rows = _mutate(ROWS, "attribution", "median_us", 1.10)
+    v = bl.compare(rows, SPEC)
+    assert len(v) == 1 and "kernel time" in v[0]
+
+
+def test_bch2_ten_pct_peak_state_regression_fails():
+    rows = _mutate(ROWS, "hbm_peak_state", "peak_donated_bytes", 1.10)
+    v = bl.compare(rows, SPEC)
+    assert len(v) == 1 and "peak state bytes" in v[0]
+
+
+def test_bch2_absolute_bound_and_direction_max():
+    rows = _mutate(ROWS, "hbm_peak_state", "ratio", 1.2)  # 0.66 > 0.6
+    assert any("peak ratio" in v for v in bl.compare(rows, SPEC))
+    spec = {"metrics": [{"name": "bw", "field": "achieved_gbps",
+                         "select": {"row_kind": "attribution"},
+                         "baseline": 20.0, "tol_rel": 0.2,
+                         "direction": "max"}]}
+    assert bl.compare(ROWS, spec) == []  # 20 >= 16
+    assert bl.compare(_mutate(ROWS, "attribution", "achieved_gbps", 0.5),
+                      spec)  # 10 < 16: higher-is-better regressed
+
+
+def test_bch2_vanished_measurement_is_a_violation():
+    rows = [r for r in ROWS if r["row_kind"] != "attribution"]
+    v = bl.compare(rows, SPEC)
+    assert any("vanished" in s for s in v)
+
+
+def test_bch2_nan_is_a_violation():
+    rows = _mutate(ROWS, "attribution", "median_us", float("nan"))
+    assert any("NaN" in s for s in bl.compare(rows, SPEC))
+
+
+# ---------------------------------------------------------------------------
+# BCH3: seeding
+# ---------------------------------------------------------------------------
+
+
+def test_bch3_seed_spec_takes_worst_value_per_direction():
+    rows = ROWS + _mutate(ROWS, "attribution", "median_us", 1.5)
+    seeded = bl.seed_spec(rows, SPEC)
+    by_name = {m["name"]: m for m in seeded["metrics"]}
+    assert by_name["kernel time"]["baseline"] == 1500.0  # max of min-dir
+    assert by_name["peak state bytes"]["baseline"] == 1.0e12
+    assert "baseline" not in by_name["peak ratio"]  # absolute untouched
+    # seeded spec accepts the rows it was seeded from
+    assert bl.compare(rows, seeded) == []
+
+
+# ---------------------------------------------------------------------------
+# BCH4: the CLI
+# ---------------------------------------------------------------------------
+
+
+def _cli_fixture(tmp_path, rows):
+    bench = tmp_path / "bench_out"
+    base = tmp_path / "expected"
+    base.mkdir(parents=True)
+    path = bl.trajectory_path(str(bench), "pack")
+    bl.append_trajectory(path, "pack", rows, manifest={})
+    (base / "pack.json").write_text(json.dumps(SPEC))
+    return path, str(base)
+
+
+def test_bch4_cli_passes_then_fails_on_regression(tmp_path, capsys):
+    path, base = _cli_fixture(tmp_path, ROWS)
+    assert bc.main([path, "--baselines", base]) == 0
+    assert "ok: pack" in capsys.readouterr().out
+
+    path2, base2 = _cli_fixture(
+        tmp_path / "bad", _mutate(ROWS, "attribution", "median_us", 1.10))
+    assert bc.main([path2, "--baselines", base2]) == 1
+    assert "REGRESSION pack" in capsys.readouterr().err
+
+
+def test_bch4_missing_spec_skips_not_fails(tmp_path):
+    bench = tmp_path / "bench_out"
+    path = bl.trajectory_path(str(bench), "mystery_suite")
+    bl.append_trajectory(path, "mystery_suite", ROWS, manifest={})
+    assert bc.main([path, "--baselines", str(tmp_path / "none")]) == 0
+
+
+def test_bch4_suite_name_resolution(tmp_path):
+    assert bc.suite_of("/x/BENCH_pack.json") == "pack"
+    assert bc.suite_of("/x/kernel_bench.json") == "kernel"
+    assert bc.suite_of("/x/whatever.jsonl", {"suite": "topology"}) \
+        == "topology"
+
+
+def test_bch4_seed_mode_rewrites_spec(tmp_path):
+    path, base = _cli_fixture(
+        tmp_path, _mutate(ROWS, "attribution", "median_us", 3.0))
+    assert bc.main([path, "--baselines", base, "--seed"]) == 0
+    spec = json.loads((tmp_path / "expected" / "pack.json").read_text())
+    by_name = {m["name"]: m for m in spec["metrics"]}
+    assert by_name["kernel time"]["baseline"] == 3000.0
+    assert bc.main([path, "--baselines", base]) == 0  # now passes
+
+
+# ---------------------------------------------------------------------------
+# BCH5: the committed specs match what the suites emit
+# ---------------------------------------------------------------------------
+
+
+def test_bch5_committed_specs_are_wellformed():
+    exp = os.path.join(_ROOT, "benchmarks", "expected")
+    suites = sorted(os.listdir(exp))
+    assert {"kernel.json", "pack.json", "topology.json"} <= set(suites)
+    for fname in suites:
+        spec = json.load(open(os.path.join(exp, fname)))
+        assert spec["suite"] == fname[:-len(".json")]
+        assert spec["metrics"], fname
+        for m in spec["metrics"]:
+            assert "field" in m and "select" in m and "name" in m
+            relative = any(k in m for k in ("baseline", "tol_rel"))
+            absolute = any(k in m for k in ("min", "max"))
+            assert relative or absolute, m["name"]
+            if "baseline" in m:
+                # committed relative baselines must be seeded numbers,
+                # not the null placeholders of a fresh spec
+                assert isinstance(m["baseline"], (int, float)), m["name"]

@@ -20,6 +20,13 @@ Invariants:
         averaging run emits loss_spread and comm byte counters.
   OBS6  the schema checker: accepts the logs this repo writes, rejects
         unknown fields, missing fields, and non-monotone meta_step.
+  OBS7  exception-safe tracing: a crash mid-span still yields a loadable
+        Chrome trace containing the interrupted span.
+  OBS8  torn-tail repair: a JSONL sink resumed onto a log whose final
+        line was cut mid-write truncates exactly the torn bytes; every
+        surviving line parses.
+  OBS9  schema versioning: the checker accepts every known_versions
+        major and rejects an unknown-major manifest.
 """
 import importlib.util
 import json
@@ -338,3 +345,162 @@ def test_obs6_csv_sink(tmp_path):
     assert len(rows) == 3
     assert "loss" in rows[0]
     assert os.path.exists(path + ".manifest.json")
+
+
+# ---------------------------------------------------------------------------
+# OBS7: exception-safe tracing
+# ---------------------------------------------------------------------------
+
+
+def test_obs7_session_exports_trace_on_crash(tmp_path):
+    from repro.obs import Tracer
+
+    tr = Tracer(enabled=True)
+    path = str(tmp_path / "trace.json")
+    with pytest.raises(RuntimeError, match="boom"):
+        with tr.session(export_path=path):
+            with tr.span("obs.dispatch"):
+                pass  # a completed span before the crash
+            with tr.span("phase.that.crashes"):
+                raise RuntimeError("boom")
+    # the crash unwound through span()'s finally AND session's cleanup:
+    # the trace file exists, loads, and contains both spans
+    events = json.load(open(path))["traceEvents"]
+    names = [e["name"] for e in events]
+    assert "obs.dispatch" in names and "phase.that.crashes" in names
+    assert all(e["dur"] >= 0 for e in events)
+    assert tr._open == []  # nothing left dangling
+
+
+def test_obs7_close_open_spans_finalizes_orphans():
+    from repro.obs import Tracer
+
+    tr = Tracer(enabled=True)
+    # a generator suspended inside a span and never resumed — the
+    # abnormal unwind span()'s finally can't see
+    gen = tr.span("orphan").__enter__ and None  # noqa: F841
+    cm = tr.span("orphan")
+    cm.__enter__()
+    assert len(tr._open) == 1
+    closed = tr.close_open_spans()
+    assert closed == ["orphan"]
+    assert tr.interrupted == ["orphan"]
+    assert [n for n, _, _ in tr.events] == ["orphan"]
+    assert tr.close_open_spans() == []  # idempotent
+
+
+def test_obs7_trainer_crash_still_writes_trace(tmp_path):
+    run_dir = str(tmp_path / "run")
+    tr = _trainer(tmp_path, sink="jsonl", run_dir=run_dir, trace=True)
+
+    def bomb(*a, **k):
+        raise KeyboardInterrupt
+
+    tr.run(2, log=None)  # builds obs, records real spans
+    tr.batch_fn = bomb
+    with pytest.raises(KeyboardInterrupt):
+        tr.run(2, log=None)
+    tr.close()
+    path = os.path.join(run_dir, "trace.json")
+    events = json.load(open(path))["traceEvents"]
+    assert any(e["name"] == "obs.dispatch" for e in events)
+
+
+# ---------------------------------------------------------------------------
+# OBS8: torn-tail repair on resume
+# ---------------------------------------------------------------------------
+
+
+def test_obs8_resume_truncates_torn_tail(tmp_path):
+    from repro.obs import JsonlSink
+
+    path = str(tmp_path / "run.jsonl")
+    sink = JsonlSink(path)
+    sink.open_run({"kind": "manifest", "schema_version": 2})
+    sink.append({"kind": "step", "meta_step": 0, "loss": 1.0})
+    sink.close()
+    whole = open(path, "rb").read()
+    # cut the last record mid-write (no newline, invalid json)
+    with open(path, "wb") as f:
+        f.write(whole + b'{"kind": "step", "meta_step": 1, "lo')
+
+    sink2 = JsonlSink(path, resume=True)
+    assert sink2.repaired_bytes == len(b'{"kind": "step", "meta_step": 1, "lo')
+    sink2.open_run({"kind": "manifest", "schema_version": 2})
+    sink2.append({"kind": "step", "meta_step": 1, "loss": 0.9})
+    sink2.close()
+    recs = [json.loads(l) for l in open(path)]  # every line parses again
+    assert [r["kind"] for r in recs] == ["manifest", "step", "manifest",
+                                        "step"]
+    assert recs[-1]["meta_step"] == 1
+
+
+def test_obs8_repair_walks_back_over_corrupt_complete_lines(tmp_path):
+    from repro.obs.sink import _repair_torn_tail
+
+    path = str(tmp_path / "run.jsonl")
+    good = b'{"kind": "manifest"}\n{"kind": "step", "meta_step": 0}\n'
+    with open(path, "wb") as f:
+        f.write(good + b'garbage not json\n{"kind": "st')
+    dropped = _repair_torn_tail(path)
+    assert dropped == len(b'garbage not json\n{"kind": "st')
+    assert open(path, "rb").read() == good
+
+
+def test_obs8_repair_noop_on_clean_and_empty_files(tmp_path):
+    from repro.obs.sink import _repair_torn_tail
+
+    clean = tmp_path / "clean.jsonl"
+    clean.write_text('{"kind": "manifest"}\n')
+    assert _repair_torn_tail(str(clean)) == 0
+    assert clean.read_text() == '{"kind": "manifest"}\n'
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("")
+    assert _repair_torn_tail(str(empty)) == 0
+
+
+# ---------------------------------------------------------------------------
+# OBS9: schema versioning
+# ---------------------------------------------------------------------------
+
+
+def test_obs9_version_gate(tmp_path):
+    ct = _check_telemetry()
+    schema = ct.load_schema(os.path.join(_ROOT, "tools",
+                                         "telemetry_schema.json"))
+    lines = _valid_lines(tmp_path)
+    man = json.loads(lines[0])
+    assert man["schema_version"] == schema["schema_version"]
+
+    # every known major is accepted (v1 logs predate alert/attribution)
+    for v in schema["known_versions"]:
+        man2 = dict(man, schema_version=v)
+        assert ct.check_stream([json.dumps(man2)] + lines[1:], schema) == []
+
+    # an unknown (future) major is rejected with an actionable message
+    man99 = dict(man, schema_version=99)
+    errs = ct.check_stream([json.dumps(man99)] + lines[1:], schema)
+    assert any("unknown major" in e for e in errs)
+
+    # minor drift within a known major passes ("2.1" -> major 2)
+    man21 = dict(man, schema_version="2.1")
+    assert ct.check_stream([json.dumps(man21)] + lines[1:], schema) == []
+
+
+def test_obs9_alert_records_validate(tmp_path):
+    ct = _check_telemetry()
+    schema = ct.load_schema(os.path.join(_ROOT, "tools",
+                                         "telemetry_schema.json"))
+    man = _valid_lines(tmp_path)[0]
+    ok = {"kind": "alert", "rule": "nonfinite_loss", "metric": "loss",
+          "value": None, "severity": "fatal", "halt": True, "meta_step": 3}
+    assert ct.check_stream([man, json.dumps(ok)], schema) == []
+    # missing field / bad severity / non-bool halt all fail
+    bad = dict(ok)
+    del bad["rule"]
+    assert ct.check_stream([man, json.dumps(bad)], schema)
+    assert ct.check_stream(
+        [man, json.dumps(dict(ok, severity="panic"))], schema)
+    assert ct.check_stream([man, json.dumps(dict(ok, halt="yes"))], schema)
+    # alert before any manifest fails
+    assert ct.check_stream([json.dumps(ok)], schema)

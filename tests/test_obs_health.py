@@ -1,0 +1,238 @@
+"""Run-health watchdog acceptance tests (repro.obs.health, DESIGN.md §11).
+
+Invariants:
+  HLT1  rule semantics: nonfinite / max / min fire exactly on their
+        condition; rel_max / rel_min compare against the strictly
+        TRAILING window median (the current value never contaminates its
+        own reference), stay silent below min_history, and non-finite
+        values are never pushed into the history.
+  HLT2  alert records are schema-valid structured events carrying the
+        rule identity, value, severity and halt decision.
+  HLT3  an injected NaN-loss run raises HealthHalt at the next flush
+        boundary with a RESUMABLE checkpoint written first, fatal alert
+        in the run log, and the log still validates against
+        tools/telemetry_schema.json.
+  HLT4  an all-healthy run is bitwise unaffected by enabling the
+        watchdogs (observation happens strictly after the one bulk
+        transfer that was happening anyway).
+  HLT5  ObsConfig.health_halt=False demotes fatal rules to warn: the
+        sick run completes, alerts are still recorded.
+"""
+import importlib.util
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import MAvgConfig, ObsConfig, TrainConfig
+from repro.core.trainer import Trainer
+from repro.models.simple import mlp_init, mlp_loss
+from repro.obs import (
+    DEFAULT_RULES,
+    HealthHalt,
+    HealthMonitor,
+    HealthRule,
+    make_monitor,
+)
+
+D, C, H = 8, 4, 16
+L, K, B = 4, 2, 4
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TIME_KEYS = ("meta_steps_per_sec", "samples_per_sec", "elapsed_s")
+
+
+# ---------------------------------------------------------------------------
+# HLT1: rule semantics
+# ---------------------------------------------------------------------------
+
+
+def _recs(metric, values, start=0):
+    return [{"meta_step": start + i, metric: v} for i, v in enumerate(values)]
+
+
+def test_hlt1_rule_validation():
+    with pytest.raises(AssertionError):
+        HealthRule("x", "loss", "bogus_kind")
+    with pytest.raises(AssertionError):
+        HealthRule("x", "loss", "max", severity="panic")
+
+
+def test_hlt1_nonfinite_fires_on_nan_and_inf_only():
+    mon = HealthMonitor([HealthRule("nf", "loss", "nonfinite",
+                                    severity="fatal")])
+    assert mon.observe(_recs("loss", [1.0, 0.5])) == []
+    fired = mon.observe(_recs("loss", [float("nan")], start=2))
+    assert len(fired) == 1 and fired[0]["rule"] == "nf"
+    fired = mon.observe(_recs("loss", [float("inf")], start=3))
+    assert len(fired) == 1
+    assert mon.halt_requested
+    assert mon.halt_alert["meta_step"] == 2  # the FIRST fatal alert
+
+
+def test_hlt1_absolute_bounds():
+    mon = HealthMonitor([
+        HealthRule("too_big", "consensus_dist", "max", threshold=5.0),
+        HealthRule("too_small", "mixing_spectral_gap", "min", threshold=1e-4),
+    ])
+    assert mon.observe([{"meta_step": 0, "consensus_dist": 5.0,
+                         "mixing_spectral_gap": 1e-4}]) == []
+    fired = mon.observe([{"meta_step": 1, "consensus_dist": 5.1,
+                          "mixing_spectral_gap": 1e-5}])
+    assert sorted(a["rule"] for a in fired) == ["too_big", "too_small"]
+    assert not mon.halt_requested  # warn severity
+
+
+def test_hlt1_rel_max_trailing_median():
+    mon = HealthMonitor([HealthRule("div", "loss", "rel_max", threshold=10.0,
+                                    window=8, min_history=4)])
+    # below min_history: silent even on a huge jump
+    assert mon.observe(_recs("loss", [1.0, 1.0, 1.0, 500.0])) == []
+    # the 500 DID enter the history; median of [1,1,1,500] = 1.0 -> a
+    # value of 11 (> 10x median) fires, 9.9 does not
+    assert mon.observe(_recs("loss", [9.9], start=4)) == []
+    fired = mon.observe(_recs("loss", [11.0], start=5))
+    assert len(fired) == 1
+    assert fired[0]["reference"] == pytest.approx(1.0)
+
+
+def test_hlt1_rel_min_and_skipped_metric():
+    mon = HealthMonitor([HealthRule("slow", "meta_steps_per_sec", "rel_min",
+                                    threshold=0.1, min_history=4)])
+    mon.observe(_recs("meta_steps_per_sec", [10.0, 10.0, 10.0, 10.0]))
+    # records missing the metric are skipped entirely
+    assert mon.observe([{"meta_step": 4, "loss": 1.0}]) == []
+    assert mon.observe(_recs("meta_steps_per_sec", [2.0], start=5)) == []
+    fired = mon.observe(_recs("meta_steps_per_sec", [0.9], start=6))
+    assert len(fired) == 1 and fired[0]["rule"] == "slow"
+
+
+def test_hlt1_nonfinite_never_enters_history():
+    mon = HealthMonitor([
+        HealthRule("nf", "loss", "nonfinite"),
+        HealthRule("div", "loss", "rel_max", threshold=10.0, min_history=4),
+    ])
+    mon.observe(_recs("loss", [1.0, 1.0, float("nan"), 1.0, 1.0]))
+    # history is [1,1,1,1] (NaN skipped): median 1.0, so 11 fires with
+    # reference 1.0 — a poisoned median would have been NaN
+    fired = mon.observe(_recs("loss", [11.0], start=5))
+    assert [a["rule"] for a in fired] == ["div"]
+    assert fired[0]["reference"] == pytest.approx(1.0)
+
+
+def test_hlt2_alert_record_shape():
+    mon = HealthMonitor([HealthRule("nf", "loss", "nonfinite",
+                                    severity="fatal")])
+    (alert,) = mon.observe(_recs("loss", [math.inf]))
+    for key in ("kind", "rule", "metric", "value", "severity", "halt",
+                "meta_step", "rule_kind", "threshold", "window"):
+        assert key in alert, key
+    assert alert["kind"] == "alert"
+    assert alert["severity"] == "fatal" and alert["halt"] is True
+    json.dumps(alert)  # JSONL-serializable
+
+
+def test_hlt1_make_monitor_demotes_fatal():
+    mon = make_monitor(halt=False)
+    assert all(r.severity == "warn" for r in mon.rules)
+    assert {r.name for r in mon.rules} == {r.name for r in DEFAULT_RULES}
+    mon.observe(_recs("loss", [float("nan")]))
+    assert mon.alerts and not mon.halt_requested
+
+
+# ---------------------------------------------------------------------------
+# trainer integration
+# ---------------------------------------------------------------------------
+
+
+def _check_telemetry():
+    spec = importlib.util.spec_from_file_location(
+        "check_telemetry", os.path.join(_ROOT, "tools", "check_telemetry.py")
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _batch_fn(nan_after=None):
+    def fn(rng, step):
+        kx, ky = jax.random.split(rng)
+        x = jax.random.normal(kx, (L, K, B, D))
+        if nan_after is not None and step >= nan_after:
+            x = x * jnp.float32(float("nan"))
+        return {"x": x, "y": jax.random.randint(ky, (L, K, B), 0, C)}
+    return fn
+
+
+def _trainer(tmp_path, *, nan_after=None, run_dir=None, sink="jsonl",
+             **obs_kw):
+    mcfg = MAvgConfig(algorithm="mavg", num_learners=L, k_steps=K,
+                      learner_lr=0.1, momentum=0.6)
+    if run_dir is None and sink in ("jsonl", "csv"):
+        run_dir = str(tmp_path / "run")
+    cfg = TrainConfig(
+        model=None, mavg=mcfg, batch_per_learner=B, meta_steps=8,
+        log_every=2, obs=ObsConfig(sink=sink, run_dir=run_dir, **obs_kw),
+    )
+    return Trainer(cfg, mlp_loss,
+                   init_params_fn=lambda rng: mlp_init(rng, D, H, C),
+                   batch_fn=_batch_fn(nan_after))
+
+
+@pytest.mark.slow
+def test_hlt3_nan_loss_halts_with_resumable_checkpoint(tmp_path):
+    run_dir = str(tmp_path / "run")
+    tr = _trainer(tmp_path, nan_after=2, run_dir=run_dir, health=True)
+    with pytest.raises(HealthHalt) as ei:
+        tr.run(8, log=lambda *_: None)
+    tr.close()
+    halt = ei.value
+    assert halt.alert["rule"] == "nonfinite_loss"
+    assert halt.alert["severity"] == "fatal"
+    # checkpoint written before the raise, resumable
+    assert halt.checkpoint_path and os.path.exists(halt.checkpoint_path)
+    assert os.path.dirname(halt.checkpoint_path).endswith("halt_ckpt")
+    tr2 = _trainer(tmp_path, run_dir=str(tmp_path / "run2"))
+    tr2.restore(halt.checkpoint_path)
+    assert int(tr2.state.step) >= 2
+    # the fatal alert landed in the run log next to its step records,
+    # and the stream still validates against the telemetry schema
+    path = os.path.join(run_dir, "run.jsonl")
+    recs = [json.loads(l) for l in open(path)]
+    alerts = [r for r in recs if r["kind"] == "alert"]
+    assert any(a["rule"] == "nonfinite_loss" and a["halt"] for a in alerts)
+    ct = _check_telemetry()
+    schema = ct.load_schema(os.path.join(_ROOT, "tools",
+                                         "telemetry_schema.json"))
+    assert ct.check_file(path, schema) == []
+
+
+@pytest.mark.slow
+def test_hlt4_healthy_run_bitwise_unaffected_by_watchdogs(tmp_path):
+    hists = {}
+    for health in (False, True):
+        tr = _trainer(tmp_path / str(health), sink="memory", health=health)
+        hists[health] = tr.run(8, log=None)
+        if health:
+            assert tr._monitor is not None and tr._monitor.alerts == []
+
+    def strip(recs):
+        return [{k: v for k, v in r.items() if k not in TIME_KEYS}
+                for r in recs]
+
+    assert strip(hists[False]) == strip(hists[True])
+
+
+@pytest.mark.slow
+def test_hlt5_health_halt_off_records_but_never_stops(tmp_path):
+    tr = _trainer(tmp_path, nan_after=2, sink="memory", health=True,
+                  health_halt=False)
+    hist = tr.run(8, log=None)  # completes — no HealthHalt
+    assert len(hist) == 8
+    assert tr._monitor.alerts and not tr._monitor.halt_requested
+    assert all(a["severity"] == "warn" for a in tr._monitor.alerts)
+    nf = [a for a in tr._monitor.alerts if a["rule"] == "nonfinite_loss"]
+    assert nf and nf[0]["halt"] is False

@@ -1,0 +1,156 @@
+"""Profiler-attribution acceptance tests (repro.obs.profile, DESIGN.md §11).
+
+Invariants:
+  PRF1  steady_timeit: warmup calls are untimed, every timed call blocks
+        on its outputs, the reported statistic is a median with IQR over
+        exactly ``iters`` repeats.
+  PRF2  attribution_row joins a Timing against a modeled cost with the
+        documented arithmetic: achieved_gbps = modeled bytes / median
+        second, pct_of_bound = 100 * achieved / peak.
+  PRF3  profile_fn produces the full row from one jittable callable
+        (AOT-modeled bytes > 0, measured median > 0).
+  PRF4  profile_phases covers phase:step, phase:local and (for averaging
+        algorithms) phase:meta_mix — through functional, non-donated
+        step instances, leaving the passed state intact.
+  PRF5  measured_peak_gbps is measured once per size and cached.
+"""
+import types
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import MAvgConfig
+from repro.core.meta import init_state
+from repro.models.simple import mlp_init, mlp_loss
+from repro.obs import measured_peak_gbps, profile_fn, profile_phases
+from repro.obs.profile import Timing, _quantile, attribution_row, steady_timeit
+
+
+# ---------------------------------------------------------------------------
+# PRF1: the timing harness
+# ---------------------------------------------------------------------------
+
+
+def test_prf1_quantile_interpolation():
+    assert _quantile([5.0], 0.5) == 5.0
+    assert _quantile([1.0, 2.0, 3.0], 0.5) == 2.0
+    assert _quantile([1.0, 2.0, 3.0, 4.0], 0.5) == 2.5
+    assert _quantile([0.0, 10.0], 0.25) == 2.5
+
+
+def test_prf1_steady_timeit_counts_calls():
+    calls = []
+
+    def fn(x):
+        calls.append(1)
+        return x + 1.0
+
+    t = steady_timeit(fn, jnp.float32(1.0), iters=7, warmup=3)
+    assert len(calls) == 10  # warmup + iters, nothing more
+    assert t.n == 7 and t.warmup == 3 and len(t.times_s) == 7
+    assert t.median_s > 0 and t.iqr_s >= 0
+    assert t.median_us == pytest.approx(t.median_s * 1e6)
+    # the median of the actual samples, not of something else
+    assert min(t.times_s) <= t.median_s <= max(t.times_s)
+
+
+def test_prf1_validates_arguments():
+    with pytest.raises(AssertionError):
+        steady_timeit(lambda: 0, iters=0)
+
+
+# ---------------------------------------------------------------------------
+# PRF2: the attribution join
+# ---------------------------------------------------------------------------
+
+
+def test_prf2_attribution_arithmetic():
+    timing = Timing(median_s=2e-3, iqr_s=1e-4, n=5, warmup=2,
+                    times_s=(2e-3,) * 5)
+    cost = types.SimpleNamespace(hbm_bytes=40_000_000, flops=1_000_000)
+    row = attribution_row("op_x", timing, cost, peak_gbps=100.0,
+                          extra={"rows": 7})
+    assert row["kind"] == "attribution" and row["op"] == "op_x"
+    assert row["median_us"] == pytest.approx(2000.0)
+    assert row["modeled_hbm_bytes"] == 40_000_000.0
+    # 40 MB in 2 ms = 20 GB/s; 20 of 100 peak = 20%
+    assert row["achieved_gbps"] == pytest.approx(20.0)
+    assert row["pct_of_bound"] == pytest.approx(20.0)
+    assert row["rows"] == 7
+    assert row["backend"] == jax.default_backend()
+
+
+def test_prf2_no_cost_no_bandwidth_fields():
+    timing = Timing(median_s=1e-3, iqr_s=0.0, n=1, warmup=0, times_s=(1e-3,))
+    row = attribution_row("op_y", timing)
+    assert "achieved_gbps" not in row and "pct_of_bound" not in row
+    assert row["median_us"] == pytest.approx(1000.0)
+
+
+# ---------------------------------------------------------------------------
+# PRF3/PRF5: profile_fn and the measured peak
+# ---------------------------------------------------------------------------
+
+
+def test_prf3_profile_fn_end_to_end():
+    x = jnp.ones((4096,), jnp.float32)
+    row = profile_fn("saxpy", lambda x: x * 2.0 + 1.0, x,
+                     iters=3, warmup=1, peak_gbps=10.0)
+    assert row["op"] == "saxpy" and row["iters"] == 3
+    assert row["median_us"] > 0
+    # the compiled program moves at least the input + output bytes
+    assert row["modeled_hbm_bytes"] >= 2 * x.nbytes
+    assert row["achieved_gbps"] > 0 and row["pct_of_bound"] > 0
+
+
+def test_prf5_peak_is_cached_per_size():
+    a = measured_peak_gbps(1 << 16, iters=2, warmup=1)
+    b = measured_peak_gbps(1 << 16, iters=2, warmup=1)
+    assert a == b and a > 0
+
+
+# ---------------------------------------------------------------------------
+# PRF4: training-phase attribution
+# ---------------------------------------------------------------------------
+
+D, C, H = 8, 4, 16
+L, K, B = 4, 2, 4
+
+
+def _batches(seed=0):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    return {"x": jax.random.normal(kx, (L, K, B, D)),
+            "y": jax.random.randint(ky, (L, K, B), 0, C)}
+
+
+@pytest.mark.slow
+def test_prf4_profile_phases_covers_step_local_mix():
+    cfg = MAvgConfig(algorithm="mavg", num_learners=L, k_steps=K,
+                     learner_lr=0.1, momentum=0.6)
+    params = mlp_init(jax.random.PRNGKey(0), D, H, C)
+    state = init_state(params, cfg)
+    before = jax.tree_util.tree_map(lambda x: x.copy(), state.learners)
+    rows = profile_phases(mlp_loss, cfg, state, _batches(), iters=2,
+                          warmup=1, peak_gbps=10.0)
+    assert [r["op"] for r in rows] == [
+        "phase:step", "phase:local", "phase:meta_mix"]
+    for r in rows:
+        assert r["kind"] == "attribution"
+        assert r["median_us"] > 0 and r["achieved_gbps"] > 0
+        assert r["algorithm"] == "mavg" and r["topology"] == "flat"
+    # functional profiling: the passed state was never donated/mutated
+    for a, b in zip(jax.tree_util.tree_leaves(before),
+                    jax.tree_util.tree_leaves(state.learners)):
+        assert (a == b).all()
+
+
+@pytest.mark.slow
+def test_prf4_non_averaging_algorithm_skips_meta_mix():
+    cfg = MAvgConfig(algorithm="downpour", num_learners=L, k_steps=K,
+                     learner_lr=0.1, momentum=0.6)
+    params = mlp_init(jax.random.PRNGKey(0), D, H, C)
+    state = init_state(params, cfg)
+    rows = profile_phases(mlp_loss, cfg, state, _batches(), iters=2,
+                          warmup=1)
+    assert [r["op"] for r in rows] == ["phase:step", "phase:local"]

@@ -1,0 +1,133 @@
+#!/usr/bin/env python
+"""Compare bench trajectories / envelopes against committed baselines.
+
+Usage:
+  python tools/bench_compare.py BENCH_kernel.json [BENCH_pack.json ...]
+      [--baselines benchmarks/expected] [--seed]
+
+The regression sentinel of DESIGN.md §11: each input file is either a
+trajectory store (``BENCH_<suite>.json``, written by ``benchmarks/run.py
+--bench-dir``) or a raw bench JSONL envelope (``--json`` output of a
+single suite). For each, the newest rows are checked against the
+committed baseline spec ``<baselines>/<suite>.json`` (see
+``src/repro/obs/baseline.py`` for the spec format). Any violation —
+a bounded metric out of tolerance, or a metric whose selector no longer
+matches any row — prints one line and the exit status is 1, which is
+what fails the CI ``bench-regression`` job.
+
+``--seed`` instead rewrites each baseline spec's relative ``baseline``
+values from the measured rows (the loosest honest baseline per
+direction) — how the committed snapshots are (re)generated after an
+intentional perf change.
+
+Runs stdlib-only (CI gate jobs have no jax): ``repro.obs.baseline`` is
+loaded by file path, never through the ``repro`` package.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import json
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_BASELINES = os.path.join(_REPO, "benchmarks", "expected")
+
+
+def _load_baseline_mod():
+    path = os.path.join(_REPO, "src", "repro", "obs", "baseline.py")
+    spec = importlib.util.spec_from_file_location("obs_baseline", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def suite_of(path: str, rows_source: dict | None = None) -> str:
+    """Suite name of an input file: the trajectory's own ``suite`` field,
+    else derived from the filename (``BENCH_pack.json`` -> ``pack``,
+    ``kernel_bench.json`` -> ``kernel``)."""
+    if rows_source and rows_source.get("suite"):
+        return str(rows_source["suite"])
+    base = os.path.basename(path)
+    for ext in (".jsonl", ".json"):
+        if base.endswith(ext):
+            base = base[: -len(ext)]
+    if base.startswith("BENCH_"):
+        base = base[len("BENCH_"):]
+    if base.endswith("_bench"):
+        base = base[: -len("_bench")]
+    return base
+
+
+def load_rows(path: str, bl) -> tuple[str, list[dict]]:
+    """(suite, newest rows) of a trajectory store OR a bench envelope."""
+    last_traj = None
+    rows: list[dict] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                obj = json.loads(line)
+            except ValueError:
+                continue  # torn tail
+            if not isinstance(obj, dict):
+                continue
+            kind = obj.get("kind")
+            if kind == "trajectory":
+                last_traj = obj
+            elif kind == "row":
+                rows.append(obj)
+            elif kind == "manifest" and last_traj is None and not rows:
+                # envelope manifests carry the suite name
+                last_traj = {"suite": obj.get("suite"), "rows": None}
+    if last_traj is not None and last_traj.get("rows") is not None:
+        return suite_of(path, last_traj), list(last_traj["rows"])
+    return suite_of(path, last_traj), rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="+",
+                    help="BENCH_<suite>.json trajectories or bench "
+                         "envelope JSONs")
+    ap.add_argument("--baselines", default=DEFAULT_BASELINES,
+                    help="directory of committed <suite>.json baseline "
+                         "specs")
+    ap.add_argument("--seed", action="store_true",
+                    help="rewrite the relative baselines from the "
+                         "measured rows instead of comparing")
+    args = ap.parse_args(argv)
+
+    bl = _load_baseline_mod()
+    failures = 0
+    for path in args.files:
+        suite, rows = load_rows(path, bl)
+        spec_path = os.path.join(args.baselines, f"{suite}.json")
+        if not os.path.exists(spec_path):
+            print(f"{path}: no baseline spec {spec_path} — skipping "
+                  f"(commit one to gate this suite)", file=sys.stderr)
+            continue
+        with open(spec_path) as f:
+            spec = json.load(f)
+        if args.seed:
+            seeded = bl.seed_spec(rows, spec)
+            with open(spec_path, "w") as f:
+                json.dump(seeded, f, indent=2, sort_keys=True)
+                f.write("\n")
+            print(f"seeded {spec_path} from {len(rows)} rows of {path}")
+            continue
+        violations = bl.compare(rows, spec)
+        for v in violations:
+            print(f"REGRESSION {suite}: {v}", file=sys.stderr)
+            failures += 1
+        if not violations:
+            n = len(spec.get("metrics", ()))
+            print(f"ok: {suite} ({path}) — {n} metric(s) within bounds")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

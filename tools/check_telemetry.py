@@ -8,16 +8,22 @@ Usage:
 The stream contract (DESIGN.md §11, src/repro/obs/sink.py):
 
 * every line is one JSON object with a ``kind`` tag — ``manifest``
-  (run identity), ``step`` (per-meta-step trainer telemetry) or ``row``
-  (free-form benchmark result);
+  (run identity), ``step`` (per-meta-step trainer telemetry), ``row``
+  (free-form benchmark result), ``alert`` (obs.health watchdog event) or
+  ``attribution`` (obs.profile measured-vs-modeled timing row);
 * a manifest precedes the first step record (resume appends another
   manifest mid-stream — allowed anywhere);
+* the manifest's ``schema_version`` major must be one the schema file
+  lists in ``known_versions`` — a log written by a future incompatible
+  envelope is rejected, not half-validated;
 * step records carry the full core field set, plus the averaging-family
   fields when the governing manifest's ``algorithm`` is an averaging
   algorithm; UNKNOWN fields fail (a typo'd or renamed metric must not
   silently fork the schema — add it to telemetry_schema.json instead);
 * ``meta_step`` is strictly increasing across the whole file, including
-  across resume manifests (one run log = one monotone trajectory).
+  across resume manifests (one run log = one monotone trajectory);
+  alert/attribution records sit outside the trajectory (an alert repeats
+  the step it fired on) and are field-checked but not ordered.
 
 Exit status 0 = valid; non-zero prints one line per violation.
 """
@@ -36,12 +42,26 @@ DEFAULT_SCHEMA = os.path.join(
     os.path.dirname(os.path.abspath(__file__)), "telemetry_schema.json"
 )
 
-KINDS = ("manifest", "step", "row")
+KINDS = ("manifest", "step", "row", "alert", "attribution")
 
 
 def load_schema(path: str) -> dict:
     with open(path) as f:
         return json.load(f)
+
+
+def _major(version) -> int | None:
+    """Major component of a schema version (int versions ARE the major;
+    a future "2.1"-style string splits on the dot)."""
+    if isinstance(version, int):
+        return version
+    if isinstance(version, float):
+        return int(version)
+    if isinstance(version, str):
+        head = version.split(".", 1)[0]
+        if head.isdigit():
+            return int(head)
+    return None
 
 
 def check_stream(lines, schema, *, name: str = "<stream>") -> list[str]:
@@ -52,6 +72,13 @@ def check_stream(lines, schema, *, name: str = "<stream>") -> list[str]:
     step_known = step_req | step_avg | set(schema["step_optional"])
     man_req = set(schema["manifest_required"])
     man_trainer = set(schema["manifest_required_trainer"])
+    alert_req = set(schema.get("alert_required", ()))
+    attr_req = set(schema.get("attribution_required", ()))
+    known_majors = {
+        _major(v) for v in schema.get(
+            "known_versions", [schema["schema_version"]]
+        )
+    }
 
     n_manifests = 0
     algorithm = None
@@ -85,6 +112,15 @@ def check_stream(lines, schema, *, name: str = "<stream>") -> list[str]:
                 errs.append(
                     f"{where}: manifest missing fields {sorted(missing)}"
                 )
+            mj = _major(rec.get("schema_version"))
+            if "schema_version" in rec and mj not in known_majors:
+                errs.append(
+                    f"{where}: manifest schema_version "
+                    f"{rec['schema_version']!r} has unknown major {mj} "
+                    f"(this validator knows majors "
+                    f"{sorted(m for m in known_majors if m is not None)}) — "
+                    f"the log was written by an incompatible envelope"
+                )
         elif kind == "step":
             if n_manifests == 0:
                 errs.append(f"{where}: step record before any manifest")
@@ -108,6 +144,25 @@ def check_stream(lines, schema, *, name: str = "<stream>") -> list[str]:
                         f"(one run log must be one monotone trajectory)"
                     )
                 last_step = s
+        elif kind == "alert":
+            if n_manifests == 0:
+                errs.append(f"{where}: alert record before any manifest")
+            missing = alert_req - set(rec)
+            if missing:
+                errs.append(f"{where}: alert missing fields {sorted(missing)}")
+            if rec.get("severity") not in ("warn", "fatal"):
+                errs.append(
+                    f"{where}: alert severity {rec.get('severity')!r} not "
+                    f"one of ('warn', 'fatal')"
+                )
+            if not isinstance(rec.get("halt"), bool):
+                errs.append(f"{where}: alert halt must be a boolean")
+        elif kind == "attribution":
+            missing = attr_req - set(rec)
+            if missing:
+                errs.append(
+                    f"{where}: attribution missing fields {sorted(missing)}"
+                )
         # kind == "row": bench rows are suite-specific, not field-checked
     if n_manifests == 0:
         errs.append(f"{name}: no manifest record in stream")
