@@ -8,6 +8,7 @@
   C  comm_bench.py      meta-communication compression (repro.comm)
   T  topology_bench.py  meta-mixing topologies x comm (repro.topology)
   L  elastic_bench.py    elastic membership / hetero-K / time-varying gossip
+  A  async_bench.py      async bounded-staleness server vs the barrier
   P  pack_bench.py      packed flat meta-plane parity / launches (repro.pack)
   R  roofline_table.py  section Dry-run / Roofline aggregation
 
@@ -35,7 +36,7 @@ def main() -> None:
                     help="explicit form of the default (smoke-sized "
                          "suites); mutually exclusive with --full")
     ap.add_argument("--only", nargs="*", default=None,
-                    help="subset: convergence mu_p k baselines kernel comm topology elastic pack roofline")
+                    help="subset: convergence mu_p k baselines kernel comm topology elastic async pack roofline")
     ap.add_argument("--bench-dir", default="bench_out",
                     help="directory of the BENCH_<suite>.json trajectory "
                          "stores ('' = don't append)")
@@ -46,6 +47,7 @@ def main() -> None:
 
     from benchmarks import (
         ablations,
+        async_bench,
         baselines,
         comm_bench,
         convergence,
@@ -63,6 +65,7 @@ def main() -> None:
         "comm": lambda: comm_bench.main(quick=quick),
         "topology": lambda: topology_bench.main(quick=quick),
         "elastic": lambda: elastic_bench.main(quick=quick),
+        "async": lambda: async_bench.main(quick=quick),
         "pack": lambda: pack_bench.main(quick=quick),
         "convergence": lambda: convergence.main(quick=quick),
         "baselines": lambda: baselines.main(quick=quick),

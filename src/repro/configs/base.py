@@ -195,17 +195,20 @@ def all_configs() -> dict[str, ModelConfig]:
 
 
 # algorithms whose meta step is a plain average — the ones the repro.comm
-# reducer owns (eamsgd/downpour have their own update structure)
+# reducer owns (eamsgd/downpour ship their own update structure through
+# the async server topology instead)
 AVERAGING_ALGOS = ("mavg", "kavg", "sync", "mavg_mlocal")
 
-# every algorithm core/meta.py implements — the single source the CLI
-# `choices` are derived from (launch/train.py)
+# every algorithm the stack implements — the single source the CLI
+# `choices` are derived from (launch/train.py). eamsgd/downpour are
+# aliases onto the async bounded-staleness server (repro.topology.
+# async_server): core/meta.py itself has no per-algorithm branches.
 ALGORITHMS = AVERAGING_ALGOS + ("eamsgd", "downpour")
 
 COMM_SCHEMES = ("dense", "int8", "fp8", "topk", "int8_topk")
 
 # meta-level mixing topologies (the repro.topology subsystem)
-TOPOLOGIES = ("flat", "hierarchical", "gossip")
+TOPOLOGIES = ("flat", "hierarchical", "gossip", "async")
 
 # one_peer_exponential is *time-varying*: step t uses only the +/-2^(t mod
 # ceil(log2 L)) offsets (a perfect XOR matching when L is a power of two),
@@ -273,6 +276,74 @@ class ElasticConfig:
         assert 0.0 <= self.drop_frac < 1.0, self.drop_frac
 
 
+ASYNC_UPDATES = ("mavg", "elastic")
+
+
+@dataclass(frozen=True)
+class AsyncConfig:
+    """The async bounded-staleness meta server (``repro.topology.
+    async_server``, DESIGN.md §12).
+
+    True asynchrony is unexpressible under SPMD (every program step is
+    collective), so — exactly like elastic membership and the retired
+    downpour queue — *when each learner reaches its K* becomes a
+    deterministic, checkpointable schedule: learner j needs
+    ``step_time[j]`` meta ticks per K-step block, pushes its displacement
+    when its logical clock fills, and pulls the current w~ without
+    waiting for anyone. Staleness (center updates between a learner's
+    pull and its push) is bounded by construction:
+    ``max(step_time) - 1 <= staleness``.
+
+    staleness      tau: the staleness bound. 0 forces a uniform profile —
+                   the synchronous degenerate case, bitwise-identical to
+                   FlatAllReduce (pinned in tests/test_async.py)
+    step_time      per-learner ticks per K-step block (length L, each
+                   >= 1); () derives a profile from ``skew``/``seed``
+    skew           when step_time is empty: deterministic profile drawn
+                   over {1..skew} (seeded permutation of an even spread)
+    seed           PRNG stream of the derived profile
+    update         'mavg' — applied displacements are weighted by the
+                   staleness-decayed block momentum (decay^tau); or
+                   'elastic' — Zhang's EASGD elastic force toward the
+                   current center, same decay weighting
+    decay          per-round staleness decay of an applied displacement
+                   (weight decay^tau); None -> the effective block
+                   momentum mu (the mu^tau rule of Yu et al.)
+    elastic_alpha  elastic-force coupling; None -> MAvgConfig.elastic_alpha
+    """
+
+    staleness: int = 0
+    step_time: tuple = ()
+    skew: int = 1
+    seed: int = 0
+    update: str = "mavg"
+    decay: Optional[float] = None
+    elastic_alpha: Optional[float] = None
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "step_time", tuple(int(m) for m in self.step_time)
+        )
+        assert self.staleness >= 0, self.staleness
+        assert self.skew >= 1, self.skew
+        assert self.update in ASYNC_UPDATES, (
+            f"unknown async update {self.update!r}; choose from "
+            f"{ASYNC_UPDATES}"
+        )
+        assert all(m >= 1 for m in self.step_time), self.step_time
+        slowest = max(self.step_time) if self.step_time else self.skew
+        if slowest - 1 > self.staleness:
+            raise ValueError(
+                f"step-time profile (slowest learner: {slowest} ticks per "
+                f"K-step block) can push displacements up to {slowest - 1} "
+                f"center updates stale, beyond the staleness bound "
+                f"tau={self.staleness} — raise staleness or flatten the "
+                f"profile"
+            )
+        if self.decay is not None:
+            assert 0.0 <= self.decay <= 1.0, self.decay
+
+
 @dataclass(frozen=True)
 class TopologyConfig:
     """Who averages with whom, how often (the ``repro.topology`` subsystem).
@@ -305,7 +376,12 @@ class TopologyConfig:
     elastic          deterministic learner dropout/join schedule
                      (ElasticConfig); absent learners run zero local steps
                      and are masked out of the mixing with the matrix
-                     renormalized to stay doubly stochastic. None -> off.
+                     re-wired to stay doubly stochastic. Under the async
+                     server an absent learner simply cannot push — drop
+                     and lag are one staleness axis. None -> off.
+    server           async bounded-staleness server knobs (AsyncConfig);
+                     only for kind='async'. None -> AsyncConfig() (the
+                     synchronous degenerate case).
     """
 
     kind: str = "flat"
@@ -318,6 +394,7 @@ class TopologyConfig:
     outer_comm: Optional[CommConfig] = None
     group_k: Optional[tuple] = None
     elastic: Optional[ElasticConfig] = None
+    server: Optional[AsyncConfig] = None
 
     def __post_init__(self):
         assert self.kind in TOPOLOGIES, (
@@ -340,9 +417,15 @@ class TopologyConfig:
             )
             assert all(k >= 1 for k in self.group_k), self.group_k
         if self.elastic is not None:
-            assert self.kind in ("hierarchical", "gossip"), (
-                f"elastic membership masks the hierarchical/gossip mixing; "
-                f"topology {self.kind!r} has no mixing rows to mask"
+            assert self.kind in ("hierarchical", "gossip", "async"), (
+                f"elastic membership masks the hierarchical/gossip mixing "
+                f"(or the async server's push schedule); topology "
+                f"{self.kind!r} has no mixing rows to mask"
+            )
+        if self.server is not None:
+            assert self.kind == "async", (
+                f"AsyncConfig only applies to the async topology, "
+                f"not {self.kind!r}"
             )
 
 
@@ -394,12 +477,25 @@ class MAvgConfig:
                 f"{self.algorithm!r} communicates through its own update"
             )
         t = self.topology
-        if t.kind != "flat" and self.algorithm not in AVERAGING_ALGOS:
+        if t.kind not in ("flat", "async") and self.algorithm not in AVERAGING_ALGOS:
             raise ValueError(
                 f"topology {t.kind!r} only applies to the averaging "
-                f"algorithms {AVERAGING_ALGOS}; {self.algorithm!r} owns its "
-                f"own communication structure"
+                f"algorithms {AVERAGING_ALGOS}; {self.algorithm!r} is an "
+                f"alias onto the async server (topology 'async')"
             )
+        if t.kind == "async":
+            if self.comm.scheme != "dense":
+                raise ValueError(
+                    f"the async server ships dense displacement planes; "
+                    f"comm scheme {self.comm.scheme!r} is not supported on "
+                    f"the async path"
+                )
+            server = t.server if t.server is not None else AsyncConfig()
+            if server.step_time and len(server.step_time) != self.num_learners:
+                raise ValueError(
+                    f"async step_time profile has {len(server.step_time)} "
+                    f"entries for num_learners={self.num_learners}"
+                )
         if t.kind == "hierarchical" and self.num_learners % t.groups:
             raise ValueError(
                 f"num_learners={self.num_learners} not divisible into "

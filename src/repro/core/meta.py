@@ -11,10 +11,18 @@ sync         synchronous MSGD: mavg with K = 1 (identical math, kept as an
 mavg_mlocal  beyond-paper / the paper's section-V note: learner-level MSGD
              inside the K-step loop, block momentum on top.
 eamsgd       Zhang et al. 2015 elastic averaging with center momentum
-             (the paper's strongest baseline in section IV).
+             (the paper's strongest baseline in section IV) — an alias
+             onto the async server's elastic update rule
+             (repro.topology.async_server, DESIGN.md §12).
 downpour     Dean et al. 2012, simulated with deterministic bounded
              staleness (true async is unexpressible under SPMD; staleness
-             is the quantity the convergence analyses bound — DESIGN.md §4).
+             is the quantity the convergence analyses bound — DESIGN.md
+             §4/§12) — an alias onto the async server's staleness-decayed
+             update with decay 1.0.
+
+This module contains NO per-algorithm meta-update branches: every
+algorithm, legacy baselines included, routes through the Topology
+protocol (repro.topology.make_topology resolves the aliases).
 
 The learner dimension is a leading pytree axis of size L = P (the paper's
 number of processors). Under pjit that axis is sharded over the mesh's
@@ -47,16 +55,12 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.configs.base import AVERAGING_ALGOS, MAvgConfig
+from repro.configs.base import MAvgConfig
 from repro.pack import make_pack_spec
 from repro.utils import (
-    tree_axpy,
     tree_broadcast_learners,
     tree_cast,
-    tree_mean_axis0,
     tree_norm,
-    tree_scale,
-    tree_sub,
     tree_zeros_like,
 )
 
@@ -72,13 +76,13 @@ class MetaState:
     momentum:      v, the block-momentum buffer (mavg/eamsgd) or None
     learners:      stacked learner copies, leading axis L
     local_momentum: learner-level momentum stacks (mavg_mlocal) or None
-    stale_queue:   downpour staleness queue (tau, ...) or None
     step:          meta iteration n
     comm_residual: per-learner error-feedback residual e_j of the comm
                    reducer (L, ...) f32, or None when EF is off
     topo:          topology buffer pytree (repro.topology — group params /
                    momentum under hierarchical, per-learner params /
-                   momentum under gossip), or None under flat
+                   momentum under gossip, logical clocks + anchor planes
+                   under the async server), or None under flat
     spec:          STATIC repro.pack.PackSpec of the packed flat
                    meta-plane, or None on the legacy per-leaf path. When
                    set, every plane above is a single lane-aligned
@@ -93,7 +97,6 @@ class MetaState:
     momentum: Any
     learners: Any
     local_momentum: Any
-    stale_queue: Any
     step: jnp.ndarray
     comm_residual: Any = None
     topo: Any = None
@@ -134,26 +137,17 @@ def init_state(params, cfg: MAvgConfig, reducer=None,
     learners = tree_broadcast_learners(
         tree_cast(gp, cfg.compute_dtype), cfg.num_learners
     )
-    comm_residual = topo = None
-    if cfg.algorithm in AVERAGING_ALGOS:
-        if topology is None:
-            from repro.topology import make_topology
+    if topology is None:
+        from repro.topology import make_topology
 
-            topology = make_topology(cfg, reducer)
-        comm_residual, topo = topology.init_buffers(gp, cfg)
+        topology = make_topology(cfg, reducer)
+    comm_residual, topo = topology.init_buffers(gp, cfg)
     return MetaState(
         global_params=gp,
         momentum=tree_zeros_like(gp),
         learners=learners,
         local_momentum=(
             tree_zeros_like(learners) if cfg.algorithm == "mavg_mlocal" else None
-        ),
-        stale_queue=(
-            jax.tree.map(
-                lambda x: jnp.zeros((cfg.staleness,) + x.shape, x.dtype), gp
-            )
-            if cfg.algorithm == "downpour"
-            else None
         ),
         step=jnp.zeros((), jnp.int32),
         comm_residual=comm_residual,
@@ -304,17 +298,15 @@ def meta_step(state: MetaState, batches, *, loss_fn: LossFn, cfg: MAvgConfig,
     both once per trace.
     """
     lr = jnp.float32(cfg.learner_lr) if lr is None else lr
-    algo = cfg.algorithm
-    if algo in AVERAGING_ALGOS and topology is None:
+    if topology is None:
         from repro.topology import make_topology
 
         topology = make_topology(cfg, reducer)
-    # heterogeneous / elastic execution: the topology may mask trailing
-    # local steps per learner (per-group K_g, membership dropout)
-    steps = (
-        topology.local_steps(state.topo, state.step)
-        if algo in AVERAGING_ALGOS else None
-    )
+    # synchrony is the topology's axis (DESIGN.md §12): it may mask
+    # trailing local steps per learner (per-group K_g, elastic
+    # membership) or mask whole K-blocks (the async server's clocks —
+    # a learner runs its K steps only on the tick it fires)
+    steps = topology.local_steps(state.topo, state.step)
     with jax.named_scope("obs.local_phase"):
         learners, local_mom, loss, gnorm, loss_l, active = _local_phase(
             loss_fn, state.learners, state.local_momentum, batches, cfg, lr,
@@ -329,74 +321,26 @@ def meta_step(state: MetaState, batches, *, loss_fn: LossFn, cfg: MAvgConfig,
         "loss_spread": _loss_spread(loss_l, active),
     }
 
-    if algo in AVERAGING_ALGOS:
-        with jax.named_scope("obs.meta_mix"):
-            gp, v, learners, comm_res, topo, topo_metrics = topology.mix(
-                learners, gp, v, comm_res, topo, step=state.step
-            )
-        metrics.update(topo_metrics)
-        if state.spec is not None:
-            # reducers see the packed plane and model their value bytes
-            # over its element count, which includes alignment/tail
-            # padding; rescale all byte metrics to the real parameter
-            # count so packed and per-leaf runs report comparable wire
-            # payloads (scale/index bytes are approximated by the same
-            # factor — chunk geometry differs between layouts anyway)
-            f = sum(state.spec.sizes) / state.spec.total
-            for k in list(metrics):
-                if k.startswith("comm_bytes"):
-                    metrics[k] = metrics[k] * f
-
-    elif algo == "eamsgd":
-        # elastic force toward the center; center gets block momentum.
-        alpha = cfg.elastic_alpha
-        e_mean = tree_sub(tree_cast(tree_mean_axis0(learners), cfg.meta_dtype), gp)
-        # v <- mu v + alpha * P * mean_j(w_j - w~); w~ += v
-        v = jax.tree.map(
-            lambda vi, ei: cfg.momentum * vi + alpha * cfg.num_learners * ei,
-            v, e_mean,
+    with jax.named_scope("obs.meta_mix"):
+        gp, v, learners, comm_res, topo, topo_metrics = topology.mix(
+            learners, gp, v, comm_res, topo, step=state.step
         )
-        gp = jax.tree.map(jnp.add, gp, v)
-        # learners relax toward the (old) center: w_j -= alpha (w_j - w~)
-        gp_b = tree_broadcast_learners(tree_cast(gp, _ldtype(learners)), cfg.num_learners)
-        learners = jax.tree.map(
-            lambda w, c: w - alpha * (w - c), learners, gp_b
-        )
-        metrics["v_norm"] = tree_norm(v)
-
-    elif algo == "downpour":
-        # deterministic bounded-staleness simulation: the displacement
-        # computed this round is applied tau rounds later.
-        # displacement relative to what learners started from this round:
-        d_now = tree_sub(
-            tree_cast(tree_mean_axis0(learners), cfg.meta_dtype), gp
-        )
-        queue = state.stale_queue
-        d_apply = jax.tree.map(lambda q: q[0], queue)
-        is_warm = state.step >= cfg.staleness
-        gp = jax.tree.map(
-            lambda w, d: w + jnp.where(is_warm, 1.0, 0.0) * d, gp, d_apply
-        )
-        queue = jax.tree.map(
-            lambda q, d: jnp.concatenate([q[1:], d[None]], axis=0), queue, d_now
-        )
-        learners = tree_broadcast_learners(
-            tree_cast(gp, _ldtype(learners)), cfg.num_learners
-        )
-        state = MetaState(
-            global_params=gp, momentum=v, learners=learners,
-            local_momentum=local_mom, stale_queue=queue,
-            step=state.step + 1, comm_residual=comm_res, topo=topo,
-            spec=state.spec,
-        )
-        metrics["stale_norm"] = tree_norm(d_apply)
-        return state, metrics
-    else:
-        raise ValueError(f"unknown algorithm {algo!r}")
+    metrics.update(topo_metrics)
+    if state.spec is not None:
+        # reducers see the packed plane and model their value bytes
+        # over its element count, which includes alignment/tail
+        # padding; rescale all byte metrics to the real parameter
+        # count so packed and per-leaf runs report comparable wire
+        # payloads (scale/index bytes are approximated by the same
+        # factor — chunk geometry differs between layouts anyway)
+        f = sum(state.spec.sizes) / state.spec.total
+        for k in list(metrics):
+            if k.startswith("comm_bytes"):
+                metrics[k] = metrics[k] * f
 
     state = MetaState(
         global_params=gp, momentum=v, learners=learners,
-        local_momentum=local_mom, stale_queue=state.stale_queue,
+        local_momentum=local_mom,
         step=state.step + 1, comm_residual=comm_res, topo=topo,
         spec=state.spec,
     )
@@ -415,7 +359,7 @@ def make_meta_step(loss_fn: LossFn, cfg: MAvgConfig, reducer=None,
     block-momentum coefficient — kavg forces mu = 0) is resolved once
     here, not per meta_step call, so every trace reuses the same objects.
     """
-    if topology is None and cfg.algorithm in AVERAGING_ALGOS:
+    if topology is None:
         from repro.topology import make_topology
 
         topology = make_topology(cfg, reducer)

@@ -66,8 +66,16 @@ class Trainer:
         rng = jax.random.PRNGKey(train_cfg.seed)
         self.data_rng, init_rng = jax.random.split(rng)
         params = init_params_fn(init_rng)
-        self.state = init_state(params, self.mcfg)
-        self._step_fn = make_meta_step(loss_fn, self.mcfg)
+        # one topology instance serves state init, the jitted step, and
+        # the host-side effective-samples accounting (work_completed) —
+        # async profiles complete fewer K-step blocks per tick than L
+        from repro.topology import make_topology
+
+        self._topology = make_topology(self.mcfg)
+        self.state = init_state(params, self.mcfg, topology=self._topology)
+        self._step_fn = make_meta_step(
+            loss_fn, self.mcfg, topology=self._topology
+        )
 
         # telemetry is built lazily at the first run() iteration: the
         # metric-key set is only known from the step's abstract output
@@ -204,11 +212,11 @@ class Trainer:
         run_t0 = time.time()
         start = int(self.state.step)  # the only pre-loop host sync
         self._last_flush_t = run_t0
-        samples_per_meta = (
-            self.mcfg.num_learners
-            * self.mcfg.k_steps
-            * self.cfg.batch_per_learner
-        )
+        # samples per completed K-step block; the topology says how many
+        # blocks have completed through a given meta step (async learners
+        # fire on their own clocks, so blocks/tick varies)
+        samples_per_block = self.mcfg.k_steps * self.cfg.batch_per_learner
+        samples_per_meta = self.mcfg.num_learners * samples_per_block
 
         def flush():
             if self._mb is None or not self._mb.count:
@@ -221,7 +229,9 @@ class Trainer:
             msps = len(recs) / dt
             for r in recs:
                 s = r["meta_step"]
-                r["samples"] = (s + 1) * samples_per_meta
+                r["samples"] = (
+                    self._topology.work_completed(s) * samples_per_block
+                )
                 r["meta_steps_per_sec"] = msps
                 r["samples_per_sec"] = msps * samples_per_meta
                 r["elapsed_s"] = now - run_t0

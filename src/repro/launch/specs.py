@@ -15,7 +15,6 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import (
-    AVERAGING_ALGOS,
     InputShape,
     MAvgConfig,
     ModelConfig,
@@ -176,30 +175,32 @@ def state_shardings(cfg: ModelConfig, mcfg: MAvgConfig, mesh, *,
     comm_sh = n(learner_specs) if uses_error_feedback(mcfg) else None
 
     # topology buffers (MetaState.topo): mirror the structure init_state
-    # allocates. Gossip's params/momentum stacks are (L, ...) like the
-    # learners and shard the same way; everything else (G-leading
-    # hierarchical stacks, EF residual stacks) stays replicated — G is
-    # small and the group axis rarely matches a mesh axis size.
-    topo_sh = None
-    if mcfg.algorithm in AVERAGING_ALGOS and mcfg.topology.kind != "flat":
-        from repro.core.meta import init_state as _init_state
+    # allocates. Gossip's params/momentum stacks and the async server's
+    # anchor plane are (L, ...) like the learners and shard the same way;
+    # everything else (G-leading hierarchical stacks, EF residual stacks,
+    # (L,) clocks) stays replicated — small, or the axis rarely matches
+    # a mesh axis size.
+    from repro.core.meta import init_state as _init_state
 
-        topo_abs = jax.eval_shape(
-            lambda p: _init_state(p, mcfg), abstract_params(cfg)
-        ).topo
+    topo_abs = jax.eval_shape(
+        lambda p: _init_state(p, mcfg), abstract_params(cfg)
+    ).topo
+    topo_sh = None
+    if topo_abs is not None:
         topo_sh = jax.tree.map(
             lambda _: NamedSharding(mesh, P()), topo_abs
         )
         if mcfg.topology.kind == "gossip":
             topo_sh["params"] = n(learner_specs)
             topo_sh["momentum"] = n(learner_specs)
+        if "anchor" in (topo_sh or {}):
+            topo_sh["anchor"] = n(learner_specs)
 
     return MetaState(
         global_params=n(gp_specs),
         momentum=n(gp_specs),
         learners=n(learner_specs),
         local_momentum=None,
-        stale_queue=None,
         step=NamedSharding(mesh, P()),
         comm_residual=comm_sh,
         topo=topo_sh,
@@ -236,24 +237,26 @@ def _packed_state_shardings(cfg: ModelConfig, mcfg: MAvgConfig, mesh, params,
 
     from repro.comm import uses_error_feedback
 
+    topo_abs = jax.eval_shape(
+        lambda p: init_state(p, mcfg), params
+    ).topo
     topo_sh = None
-    if mcfg.algorithm in AVERAGING_ALGOS and mcfg.topology.kind != "flat":
-        topo_abs = jax.eval_shape(
-            lambda p: init_state(p, mcfg), params
-        ).topo
+    if topo_abs is not None:
         # hierarchical (G, ...) stacks replicated (G is small and rarely
-        # matches a mesh axis), gossip per-learner stacks like learners
+        # matches a mesh axis); gossip per-learner stacks and the async
+        # server's (L, rows, 128) anchor plane shard like the learners
         topo_sh = jax.tree.map(lambda _: ns(), topo_abs)
         if mcfg.topology.kind == "gossip":
             topo_sh["params"] = stacked
             topo_sh["momentum"] = stacked
+        if "anchor" in topo_sh:
+            topo_sh["anchor"] = stacked
 
     return MetaState(
         global_params=plane,
         momentum=plane,
         learners=stacked,
         local_momentum=None,
-        stale_queue=None,
         step=ns(),
         comm_residual=stacked if uses_error_feedback(mcfg) else None,
         topo=topo_sh,

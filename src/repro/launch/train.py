@@ -21,10 +21,12 @@ import jax.numpy as jnp
 
 from repro.configs.base import (
     ALGORITHMS,
+    ASYNC_UPDATES,
     COMM_SCHEMES,
     GOSSIP_GRAPHS,
     OBS_SINKS,
     TOPOLOGIES,
+    AsyncConfig,
     CommConfig,
     ElasticConfig,
     MAvgConfig,
@@ -77,6 +79,23 @@ def main() -> None:
     ap.add_argument("--group-k", default=None,
                     help="hierarchical: comma-separated per-group local-step "
                          "counts K_g (each <= --k), e.g. --group-k 2,4")
+    ap.add_argument("--async-staleness", type=int, default=0,
+                    help="async: staleness bound tau (center updates a "
+                         "pulled copy may lag behind)")
+    ap.add_argument("--async-profile", default=None,
+                    help="async: comma-separated per-learner step-time "
+                         "profile in meta ticks, e.g. --async-profile "
+                         "1,1,2,4 (overrides --async-skew)")
+    ap.add_argument("--async-skew", type=int, default=1,
+                    help="async: slowest/fastest step-time ratio of the "
+                         "seed-generated profile (1 = uniform)")
+    ap.add_argument("--async-update", default="mavg", choices=ASYNC_UPDATES,
+                    help="async: staleness-decayed update rule")
+    ap.add_argument("--async-decay", type=float, default=None,
+                    help="async: staleness decay base (default: the block "
+                         "momentum, the mu^tau rule)")
+    ap.add_argument("--async-seed", type=int, default=0,
+                    help="async: seed assigning profile slots to learners")
     ap.add_argument("--elastic-period", type=int, default=0,
                     help="elastic membership schedule length in meta steps "
                          "(0 = everyone always present)")
@@ -137,6 +156,16 @@ def main() -> None:
                       seed=args.elastic_seed)
         if args.elastic_period > 0 else None
     )
+    server = (
+        AsyncConfig(
+            staleness=args.async_staleness,
+            step_time=(tuple(int(t) for t in args.async_profile.split(","))
+                       if args.async_profile else ()),
+            skew=args.async_skew, seed=args.async_seed,
+            update=args.async_update, decay=args.async_decay,
+        )
+        if args.topology == "async" else None
+    )
     mcfg = MAvgConfig(
         algorithm=args.algorithm, num_learners=args.learners, k_steps=args.k,
         learner_lr=args.lr, momentum=args.momentum,
@@ -146,7 +175,7 @@ def main() -> None:
             kind=args.topology, groups=args.groups,
             outer_every=args.outer_every, outer_momentum=args.outer_momentum,
             graph=args.gossip_graph, outer_comm=outer_comm,
-            group_k=group_k, elastic=elastic,
+            group_k=group_k, elastic=elastic, server=server,
         ),
     )
     tcfg = TrainConfig(

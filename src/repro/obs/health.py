@@ -96,6 +96,13 @@ DEFAULT_RULES = (
     # own trailing median
     HealthRule("throughput_collapse", "meta_steps_per_sec", "rel_min",
                threshold=0.1, min_history=8),
+    # async bounded-staleness server: applied staleness is bounded by
+    # construction (tau <= AsyncConfig.staleness, validated at config
+    # time), so a p99 drifting past any sane bound means the step-time
+    # profile or the clock state is corrupt — absolute, loose, and absent
+    # from synchronous runs (absent metric -> rule skipped)
+    HealthRule("staleness_runaway", "staleness_p99", "max",
+               threshold=32.0),
 )
 
 

@@ -215,16 +215,14 @@ def profile_phases(loss_fn, cfg, state, batches, lr=None, *, iters: int = 10,
     the Chrome-trace-compatible xplane export lands next to the PR 6
     span traces).
     """
-    from repro.configs.base import AVERAGING_ALGOS
     from repro.core.meta import _local_phase, make_meta_step
+    from repro.topology import make_topology
 
     lr = jnp.float32(cfg.learner_lr) if lr is None else lr
-    averaging = cfg.algorithm in AVERAGING_ALGOS
-    topology = None
-    if averaging:
-        from repro.topology import make_topology
-
-        topology = make_topology(cfg, None)
+    # every algorithm now routes its meta phase through a Topology
+    # (eamsgd/downpour are aliases onto the async server), so the
+    # meta_mix row is always attributable
+    topology = make_topology(cfg, None)
 
     step_fn = make_meta_step(loss_fn, cfg, topology=topology)
 
@@ -232,22 +230,19 @@ def profile_phases(loss_fn, cfg, state, batches, lr=None, *, iters: int = 10,
         return step_fn(s, b, lr=l)
 
     def local_phase(s, b, l):
-        steps = (
-            topology.local_steps(s.topo, s.step) if averaging else None
-        )
+        steps = topology.local_steps(s.topo, s.step)
         return _local_phase(loss_fn, s.learners, s.local_momentum, b, cfg,
                             l, steps=steps, spec=s.spec)
+
+    def meta_mix(s):
+        return topology.mix(s.learners, s.global_params, s.momentum,
+                            s.comm_residual, s.topo, step=s.step)
 
     targets = [
         ("phase:step", whole_step, (state, batches, lr)),
         ("phase:local", local_phase, (state, batches, lr)),
+        ("phase:meta_mix", meta_mix, (state,)),
     ]
-    if averaging:
-        def meta_mix(s):
-            return topology.mix(s.learners, s.global_params, s.momentum,
-                                s.comm_residual, s.topo, step=s.step)
-
-        targets.append(("phase:meta_mix", meta_mix, (state,)))
 
     rows = [
         profile_fn(op, fn, *args, iters=iters, warmup=warmup,

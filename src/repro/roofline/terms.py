@@ -153,6 +153,10 @@ def topology_wire_bytes(n_params: int, comm: Optional[CommConfig],
                   every step — inter-node, no amortization; the degree is
                   averaged over the graph period (one-peer exponential)
                   and edges die when either endpoint is absent
+    async         push-when-ready: learner j ships its (dense) plane once
+                  per step_time[j]-tick block, so the per-tick inter
+                  payload is sum_j per / m_j — the staleness profile
+                  amortizes the wire exactly the way it skews the clocks
     """
     L = num_learners
     per = lambda c: participant_wire_bytes(n_params, c,
@@ -172,6 +176,17 @@ def topology_wire_bytes(n_params: int, comm: Optional[CommConfig],
         avg_deg = avg_graph_degree(topology.graph, L)
         intra = 0.0
         inter = L * avg_deg * per(topology.inner_comm or comm) * edge_frac
+    elif topology.kind == "async":
+        from repro.configs.base import AsyncConfig
+        from repro.topology import step_time_profile
+
+        acfg = topology.server if topology.server is not None else AsyncConfig()
+        prof = step_time_profile(L, acfg)
+        pushes_per_tick = float((1.0 / prof).sum())
+        intra = 0.0
+        # the async server ships dense displacement planes (enforced at
+        # config time), one per firing learner per tick
+        inter = per(comm) * pushes_per_tick * learner_frac
     else:
         raise ValueError(f"unknown topology {topology.kind!r}")
     return {"intra_bytes": float(intra), "inter_bytes": float(inter),

@@ -1,6 +1,11 @@
 # Meta-level mixing topologies: who averages with whom, how often
 # (DESIGN.md §7). The factory is keyed on MAvgConfig.topology and composes
 # with repro.comm — each edge class carries its own Reducer.
+from repro.topology.async_server import (
+    AsyncServer,
+    resolve_async_config,
+    step_time_profile,
+)
 from repro.topology.base import (
     FlatAllReduce,
     Topology,
@@ -33,6 +38,11 @@ def make_topology(cfg, reducer=None) -> Topology:
     injection point meta_step/make_meta_step always exposed.
     """
     kind = cfg.topology.kind
+    # the legacy downpour/eamsgd algorithms are aliases onto the async
+    # bounded-staleness server (resolve_async_config) — core/meta.py has
+    # no per-algorithm meta-update branches
+    if kind == "async" or cfg.algorithm in ("eamsgd", "downpour"):
+        return AsyncServer(cfg, reducer)
     if kind == "flat":
         return FlatAllReduce(cfg, reducer)
     if kind == "hierarchical":
@@ -43,6 +53,7 @@ def make_topology(cfg, reducer=None) -> Topology:
 
 
 __all__ = [
+    "AsyncServer",
     "FlatAllReduce",
     "Gossip",
     "Hierarchical",
@@ -60,4 +71,6 @@ __all__ = [
     "mixing_matrix_stack",
     "mixing_period",
     "present_edge_count",
+    "resolve_async_config",
+    "step_time_profile",
 ]

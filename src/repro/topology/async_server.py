@@ -1,0 +1,360 @@
+"""The async bounded-staleness meta server (DESIGN.md §12).
+
+Every other topology in this package barriers all live learners every K
+local steps. This one retires the barrier: each learner pushes its packed
+displacement plane when *it* finishes a K-step block and pulls the
+current w~ without waiting for anyone. True asynchrony is unexpressible
+under SPMD — every program step is collective — so, exactly like elastic
+membership (§8) and the retired downpour queue (§4), *when* each learner
+reaches its K becomes a deterministic, checkpointable schedule:
+
+  * ``AsyncConfig.step_time[j]`` is learner j's simulated wall-clock cost
+    of one K-step block, in meta ticks. One meta tick = one dispatch of
+    the jitted step = the fastest learner's block time.
+  * A per-learner logical clock rides in ``MetaState.topo["clock"]``;
+    learner j fires (pushes + pulls) on the ticks where its clock fills,
+    and runs its K local steps only on those ticks (the same trailing-
+    step masking the elastic schedules use — the SPMD program never
+    changes shape). Clocks start at ``-(j mod step_time[j])`` so pushes
+    de-phase instead of coinciding; a learner leaving its start lag
+    pulls the current center at block start (it has computed nothing
+    yet), so the first block obeys the same staleness bound as every
+    later one.
+  * Staleness tau_j = center updates between learner j's last pull and
+    this push — tracked exactly with an update counter
+    (``topo["updates"]``) and per-learner pull stamps
+    (``topo["pull_update"]``). The step-time profile bounds it by
+    construction: tau_j <= step_time[j] - 1 <= AsyncConfig.staleness
+    (validated at config time).
+  * Applied displacements are weighted by the staleness decay
+    ``decay**tau`` (default: the block momentum mu — the mu^tau rule the
+    momentum/staleness analyses of Yu et al. revolve around), under one
+    of two update rules: ``mavg`` (staleness-decayed block momentum on
+    the mean of the ready displacements) or ``elastic`` (Zhang's EASGD
+    elastic force toward the *current* center; firing learners relax
+    instead of hard-resetting).
+
+The legacy ``eamsgd`` and ``downpour`` algorithms are aliases onto this
+server (``resolve_async_config``): eamsgd is the elastic update with a
+uniform profile, downpour is the mavg update with decay 1.0 and a
+uniform ``staleness+1``-tick profile whose de-phased clocks reproduce
+the old warmup (no center motion for the first tau ticks) and per-push
+staleness tau. core/meta.py keeps no per-algorithm branches.
+
+A uniform all-ones profile with the mavg update is the synchronous
+degenerate case: every learner fires every tick with staleness 0, and
+``mix`` delegates to ``FlatAllReduce`` — bitwise-identical, pinned in
+tests/test_async.py. Elastic membership composes: an absent learner
+cannot fire, so its clock keeps filling and it pushes at its next
+present tick — drop vs. lag is one axis (an absent learner is just one
+with unbounded step time).
+
+All server state is packed: clocks/stamps are (L,) int32 and the anchor
+(pending-displacement base) plane is an (L, rows, 128) stacked buffer,
+so the zero-copy donation path applies unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AsyncConfig, MAvgConfig
+from repro.comm.reducer import dense_bytes
+from repro.topology.base import (
+    FlatAllReduce,
+    Topology,
+    effective_momentum,
+    learner_dtype,
+)
+from repro.topology.elastic import (
+    membership_at,
+    membership_schedule,
+    tree_where_mask,
+)
+from repro.utils import tree_broadcast_learners, tree_cast, tree_norm
+
+
+def resolve_async_config(cfg: MAvgConfig) -> AsyncConfig:
+    """The AsyncConfig an MAvgConfig means, including the legacy aliases.
+
+    eamsgd  -> elastic update, uniform profile, tau=0 (synchronous EASGD)
+    downpour-> mavg update, decay 1.0 (the legacy queue applied stale
+               displacements at full weight), uniform staleness+1-tick
+               profile: de-phased clocks give every push staleness
+               ~min(L-1, tau) and reproduce the legacy warmup (the
+               center holds for the first tau ticks)
+    """
+    explicit = cfg.topology.server
+    if cfg.algorithm == "eamsgd":
+        base = explicit if explicit is not None else AsyncConfig()
+        return dataclasses.replace(
+            base, update="elastic",
+            elastic_alpha=(base.elastic_alpha if base.elastic_alpha
+                           is not None else cfg.elastic_alpha),
+        )
+    if cfg.algorithm == "downpour":
+        if explicit is not None:
+            return explicit
+        return AsyncConfig(
+            staleness=cfg.staleness,
+            step_time=(cfg.staleness + 1,) * cfg.num_learners,
+            update="mavg", decay=1.0,
+        )
+    return explicit if explicit is not None else AsyncConfig()
+
+
+def step_time_profile(L: int, acfg: AsyncConfig) -> np.ndarray:
+    """(L,) int32 ticks-per-K-block profile, deterministic in the config.
+
+    An explicit ``step_time`` wins; otherwise ``skew`` spreads {1..skew}
+    evenly over the learners and a seeded permutation assigns slots (so
+    which learner is the straggler is seed-, not index-, determined).
+    """
+    if acfg.step_time:
+        assert len(acfg.step_time) == L, (acfg.step_time, L)
+        return np.asarray(acfg.step_time, np.int32)
+    if acfg.skew <= 1:
+        return np.ones((L,), np.int32)
+    prof = np.rint(np.linspace(1.0, float(acfg.skew), L)).astype(np.int32)
+    rng = np.random.RandomState(acfg.seed)
+    return prof[rng.permutation(L)]
+
+
+class AsyncServer(Topology):
+    """Push-when-ready / pull-without-waiting with bounded staleness."""
+
+    name = "async"
+
+    def __init__(self, cfg: MAvgConfig, reducer=None):
+        from repro.comm import make_reducer
+
+        self.cfg = cfg
+        self.acfg = resolve_async_config(cfg)
+        self.mu = effective_momentum(cfg)
+        self.decay = self.acfg.decay if self.acfg.decay is not None else self.mu
+        self.alpha = (self.acfg.elastic_alpha
+                      if self.acfg.elastic_alpha is not None
+                      else cfg.elastic_alpha)
+        self.reducer = make_reducer(cfg) if reducer is None else reducer
+        self.profile = step_time_profile(cfg.num_learners, self.acfg)
+        # de-phased start clocks: learner j first fires at tick
+        # profile[j]-1 + (j mod profile[j]) — no center motion before the
+        # slowest warmup a synchronous run would also pay, pushes spread
+        # over the window after it
+        self.start_clock = -(np.arange(cfg.num_learners) % self.profile)
+        self.start_clock = self.start_clock.astype(np.int32)
+        elastic = cfg.topology.elastic
+        self.membership = (
+            membership_schedule(cfg.num_learners, elastic)
+            if elastic is not None else None
+        )
+        # the synchronous degenerate case: everyone fires every tick with
+        # staleness 0 — delegate the arithmetic to FlatAllReduce so tau=0
+        # is bitwise-identical to the flat topology (tests/test_async.py)
+        self.degenerate = (
+            self.acfg.update == "mavg"
+            and bool((self.profile == 1).all())
+            and self.membership is None
+        )
+        self._flat = FlatAllReduce(cfg, self.reducer)
+        # host-side fire simulation cache for work_completed()
+        self._sim_clock = self.start_clock.copy()
+        self._sim_t = 0
+        self._sim_cum: list[int] = []
+
+    # -- buffers -----------------------------------------------------------
+
+    def init_buffers(self, gp, cfg: MAvgConfig):
+        L = cfg.num_learners
+        topo = {
+            "clock": jnp.asarray(self.start_clock),
+            "pull_update": jnp.zeros((L,), jnp.int32),
+            "updates": jnp.zeros((), jnp.int32),
+            # the center copy each learner last pulled (meta dtype): the
+            # base its pending displacement is measured against
+            "anchor": tree_broadcast_learners(gp, L),
+        }
+        if self.membership is not None:
+            topo["membership"] = jnp.asarray(self.membership)
+        return self.reducer.init_residual(gp, L), topo
+
+    # -- clock hooks -------------------------------------------------------
+
+    def fire_mask(self, topo, step):
+        """(L,) bool: which learners complete a K-step block this tick."""
+        m = jnp.asarray(self.profile)
+        fire = (topo["clock"] + 1) >= m
+        if "membership" in topo:
+            fire = fire & (membership_at(topo["membership"], step) > 0)
+        return fire
+
+    def local_steps(self, topo, step):
+        if self.degenerate:
+            return None
+        k = jnp.int32(self.cfg.k_steps)
+        return jnp.where(self.fire_mask(topo, step), k, 0)
+
+    def work_completed(self, step) -> int:
+        """Cumulative K-step blocks completed through meta step ``step``
+        (host-side replay of the deterministic clock recurrence)."""
+        n = int(step) + 1
+        while self._sim_t < n:
+            fire = (self._sim_clock + 1) >= self.profile
+            if self.membership is not None:
+                t = self._sim_t % self.membership.shape[0]
+                fire = fire & (self.membership[t] > 0)
+            prev = self._sim_cum[-1] if self._sim_cum else 0
+            self._sim_cum.append(prev + int(fire.sum()))
+            self._sim_clock = np.where(fire, 0, self._sim_clock + 1)
+            self._sim_t += 1
+        return self._sim_cum[n - 1] if n >= 1 else 0
+
+    # -- the meta phase ----------------------------------------------------
+
+    def mix(self, learners, gp, v, comm_residual, topo, *, step):
+        cfg = self.cfg
+        L = cfg.num_learners
+        if self.degenerate:
+            gp2, v2, learners2, comm_residual, _, metrics = self._flat.mix(
+                learners, gp, v, comm_residual, None, step=step
+            )
+            u = topo["updates"] + 1
+            topo = dict(
+                topo,
+                clock=jnp.zeros((L,), jnp.int32),
+                pull_update=jnp.zeros((L,), jnp.int32) + u,
+                updates=u,
+                anchor=tree_broadcast_learners(gp2, L),
+            )
+            metrics.update({
+                "stale_norm": metrics["displacement_norm"],
+                "staleness_mean": jnp.float32(0.0),
+                "staleness_max": jnp.float32(0.0),
+                "staleness_p99": jnp.float32(0.0),
+                "fired_count": jnp.float32(L),
+            })
+            return gp2, v2, learners2, comm_residual, topo, metrics
+
+        fire = self.fire_mask(topo, step)
+        ff = fire.astype(jnp.float32)
+        n_fired = ff.sum()
+        anyf = n_fired > 0
+        gate = anyf.astype(jnp.float32)
+        u0 = topo["updates"]
+        tau = jnp.maximum(u0 - topo["pull_update"], 0).astype(jnp.float32)
+        wgt = ff * jnp.power(jnp.float32(self.decay), tau)
+        expand = lambda a, x: a.reshape((L,) + (1,) * (x.ndim - 1))
+        ldt = learner_dtype(learners)
+
+        # pre-update consensus: how far the stack has drifted from the
+        # center (same telemetry role as FlatAllReduce's, but measured
+        # against w~ — there is no common average to measure against)
+        consensus = tree_norm(jax.tree.map(
+            lambda w, g: w.astype(jnp.float32) - g.astype(jnp.float32)[None],
+            learners, gp,
+        ))
+
+        if self.acfg.update == "mavg":
+            # staleness-decayed block momentum on the mean of the ready
+            # displacements (each measured against the center its learner
+            # pulled): v <- mu v + eta * mean_ready(decay^tau (w_j - a_j))
+            d = jax.tree.map(
+                lambda w, a: (w.astype(jnp.float32) - a.astype(jnp.float32))
+                * expand(wgt, w),
+                learners, topo["anchor"],
+            )
+            applied = jax.tree.map(
+                lambda di: di.sum(0) / jnp.maximum(n_fired, 1.0), d
+            )
+            v_new = jax.tree.map(
+                lambda vi, di: self.mu * vi + cfg.meta_lr * di, v, applied
+            )
+            if cfg.nesterov:
+                upd = jax.tree.map(
+                    lambda vi, di: self.mu * vi + cfg.meta_lr * di,
+                    v_new, applied,
+                )
+            else:
+                upd = v_new
+        else:
+            # EASGD elastic force toward the CURRENT center, staleness-
+            # decayed: v <- mu v + alpha * sum_ready(decay^tau (w_j - w~))
+            force = jax.tree.map(
+                lambda w, g: (w.astype(jnp.float32)
+                              - g.astype(jnp.float32)[None]) * expand(wgt, w),
+                learners, gp,
+            )
+            applied = jax.tree.map(lambda fi: fi.sum(0), force)
+            v_new = jax.tree.map(
+                lambda vi, si: self.mu * vi + self.alpha * si, v, applied
+            )
+            upd = v_new
+
+        # push-when-ready: the center only moves on ticks with pushes
+        v = jax.tree.map(lambda nv, ov: jnp.where(anyf, nv, ov), v_new, v)
+        gp_new = jax.tree.map(lambda g, ui: g + gate * ui, gp, upd)
+
+        # pull-without-waiting: firing learners take the fresh center
+        # (mavg: hard reset; elastic: relax toward it), re-anchor, and
+        # restamp their pull; everyone else keeps computing. A learner
+        # whose clock just crossed 0 is leaving its de-phased start lag —
+        # it has run zero local steps, so it pulls the current center at
+        # block start (hard, both update rules), keeping the first
+        # block's staleness under the same step_time[j]-1 bound.
+        clock_new = jnp.where(fire, 0, topo["clock"] + 1)
+        refresh = (clock_new == 0) & ~fire
+        if "membership" in topo:
+            # an absent learner is frozen outright — it pulls nothing
+            # (drop is unbounded lag; the tau bound applies to present
+            # learners' step-time profile only)
+            refresh = refresh & (membership_at(topo["membership"], step) > 0)
+        rf = refresh.astype(jnp.float32)
+        gp_b = tree_broadcast_learners(tree_cast(gp_new, ldt), L)
+        if self.acfg.update == "mavg":
+            pulled = gp_b
+        else:
+            pulled = jax.tree.map(
+                lambda w, c: w - self.alpha * (w - c), learners, gp_b
+            )
+        learners = tree_where_mask(ff, pulled, learners)
+        learners = tree_where_mask(rf, gp_b, learners)
+        anchor = tree_where_mask(
+            ff + rf, tree_broadcast_learners(gp_new, L), topo["anchor"]
+        )
+        u_new = u0 + anyf.astype(jnp.int32)
+        topo = dict(
+            topo,
+            clock=clock_new,
+            pull_update=jnp.where(fire | refresh, u_new,
+                                  topo["pull_update"]),
+            updates=u_new,
+            anchor=anchor,
+        )
+
+        # wire model: only the ready learners ship their (dense)
+        # displacement plane this tick — pushes no longer coincide
+        per_learner = dense_bytes(learners) / L
+        cb = per_learner * n_fired
+        tau_fired = tau * ff
+        metrics = {
+            "v_norm": tree_norm(v),
+            "displacement_norm": tree_norm(applied),
+            "stale_norm": tree_norm(applied),
+            "consensus_dist": consensus,
+            "staleness_mean": tau_fired.sum() / jnp.maximum(n_fired, 1.0),
+            "staleness_max": jnp.max(tau_fired),
+            "staleness_p99": jnp.where(
+                anyf,
+                jnp.nanpercentile(jnp.where(fire, tau, jnp.nan), 99.0),
+                0.0,
+            ),
+            "fired_count": n_fired,
+            "comm_bytes": cb,
+            "comm_bytes_dense": cb,
+            "comm_compression": jnp.float32(1.0),
+        }
+        return gp_new, v, learners, comm_residual, topo, metrics

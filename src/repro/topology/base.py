@@ -99,13 +99,33 @@ def fused_momentum_broadcast_update(gp, v, avg, *, mu, eta, num_learners,
 
 
 class Topology:
-    """Base: one meta-level mixing step over the learner stack."""
+    """Base: one meta-level mixing step over the learner stack.
+
+    Synchrony itself is part of the protocol (DESIGN.md §12): the clock
+    hooks below describe *when* learners reach their K-step boundary.
+    Synchronous topologies are the tau=0 degenerate case — every learner
+    fires every meta tick — which is what the defaults encode; the async
+    bounded-staleness server (``topology/async_server.py``) overrides
+    them with a deterministic per-learner step-time profile.
+    """
 
     name = "topology"
 
     def init_buffers(self, gp, cfg: MAvgConfig) -> tuple[Any, Any]:
         """(comm_residual, topo) buffers for MetaState (None = unused)."""
         return None, None
+
+    def fire_mask(self, topo, step):
+        """(L,) bool: which learners push a finished K-step block at this
+        meta tick. None = all of them (the synchronous barrier)."""
+        return None
+
+    def work_completed(self, step) -> int:
+        """Cumulative K-step blocks completed through meta step ``step``
+        (host-side, deterministic): the trainer's effective-samples
+        accounting. Synchronous topologies complete L blocks per tick."""
+        cfg = getattr(self, "cfg", None)
+        return (int(step) + 1) * (cfg.num_learners if cfg is not None else 1)
 
     def local_steps(self, topo, step):
         """(L,) int32 active local-step counts for this meta step, or None

@@ -16,17 +16,27 @@ An absent learner at meta step n:
     matrix is masked), and
   * keeps its params / momentum / error-feedback residual frozen.
 
-``mask_mixing_matrix`` keeps the masked W doubly stochastic: for a
-*symmetric* W, zeroing the edges to absent learners and returning the
-lost row mass to the diagonal preserves both row and column sums over
-the present subset (the column sum over present rows inherits the row
-identity by symmetry), while absent rows become identity rows. Hence the
-all-learner mean is exactly preserved through churn: present learners
-mix doubly-stochastically among themselves, absent learners are frozen.
-With an all-present mask the arithmetic is the identity on W bit-for-bit
-(`x * 1.0` and `x + 0.0` are exact), which is what makes the
-``drop_frac=0`` ≡ static-topology invariant of tests/test_elastic.py a
-bitwise statement rather than an allclose one.
+``mask_mixing_matrix`` keeps the masked W doubly stochastic by
+*re-wiring around* absent learners (the stochastic complement / Markov
+censoring of the absent block) instead of dumping the lost edge mass on
+the diagonal: a present learner that lost its neighbor inherits that
+neighbor's connections, weighted by how the censored chain would have
+flowed through it —
+
+    W'_pp = W_pp + W_pa (I - W_aa)^{-1} W_ap
+
+For a symmetric doubly-stochastic W this preserves both row and column
+sums over the present subset (censoring preserves stationarity), while
+absent rows become identity rows (frozen learners), so the all-learner
+mean is exactly preserved through churn. Unlike diagonal
+renormalization — which makes the surviving chain *lazier* and shrinks
+the spectral gap — censoring keeps the graph connected through the
+hole, which is the churn-aware spectral-gap improvement pinned in
+tests/test_elastic.py. With an all-present mask the correction term is
+exactly zero and the arithmetic is the identity on W bit-for-bit
+(`x * 1.0` and `x + 0.0` are exact), which keeps the ``drop_frac=0`` ≡
+static-topology invariant a bitwise statement rather than an allclose
+one.
 """
 from __future__ import annotations
 
@@ -73,19 +83,33 @@ def membership_at(membership, step):
 def mask_mixing_matrix(W, m):
     """Mask a symmetric doubly-stochastic W by the (L,) 0/1 mask ``m``.
 
-    Present rows keep their present-neighbor weights and absorb the mass
-    of masked edges onto the diagonal; absent rows become identity rows
-    (frozen learners). Returns a W' that is doubly stochastic restricted
-    to the present subset, and bitwise equal to W when m is all ones.
+    Present rows are re-wired through their absent neighbors via the
+    stochastic complement ``W_pp + W_pa (I - W_aa)^{-1} W_ap`` (Markov
+    censoring); absent rows become identity rows (frozen learners).
+    Returns a W' that is doubly stochastic restricted to the present
+    subset, and bitwise equal to W when m is all ones (the correction is
+    exactly zero then).
+
+    jit-friendly: the p/a partition is expressed with diagonal masks, so
+    shapes are static. ``I - diag(1-m) W diag(1-m)`` is block diagonal —
+    identity on present coordinates, ``I - W_aa`` on absent ones — so
+    one full-size solve computes ``(I - W_aa)^{-1} W_ap`` embedded.
     """
     L = W.shape[0]
+    a = 1.0 - m
     eye = jnp.eye(L, dtype=W.dtype)
-    offdiag = W * (1.0 - eye)
-    masked_off = offdiag * (m[:, None] * m[None, :])
-    # mass of the edges this row lost to absent neighbors -> diagonal
-    diag_present = jnp.diagonal(W) + (offdiag * (1.0 - m)[None, :]).sum(axis=1)
-    diag = m * diag_present + (1.0 - m)
-    return masked_off + eye * diag[:, None]
+    W_pp = W * (m[:, None] * m[None, :])
+    W_pa = W * (m[:, None] * a[None, :])
+    W_ap = W * (a[:, None] * m[None, :])
+    W_aa = W * (a[:, None] * a[None, :])
+    # censor the absent block: routes that passed through absent learners
+    # are summed over all lengths, Sum_k W_aa^k = (I - W_aa)^{-1}
+    flow = jnp.linalg.solve(eye - W_aa, W_ap)
+    correction = W_pa @ flow
+    # the product of nonnegative factors; the solve can leave -eps where
+    # an entry is exactly zero
+    correction = jnp.maximum(correction, 0.0)
+    return W_pp + correction + eye * a[:, None]
 
 
 def present_edge_count(W, m):

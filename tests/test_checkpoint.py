@@ -64,12 +64,10 @@ def test_momentum_saved(tmp_path):
 
 
 def test_comm_residual_roundtrip(tmp_path):
-    """Extended MetaState: a non-None error-feedback comm_residual (and a
-    stale_queue in the same state) round-trips bit-identically, and a
-    resumed int8+EF run stays on the live trajectory — losing e_j would
-    silently re-bias the compressed averaging."""
-    import dataclasses as dc
-
+    """Extended MetaState: a non-None error-feedback comm_residual
+    round-trips bit-identically, and a resumed int8+EF run stays on the
+    live trajectory — losing e_j would silently re-bias the compressed
+    averaging."""
     from repro.configs.base import CommConfig
 
     cfg = MAvgConfig(algorithm="mavg", num_learners=2, k_steps=2,
@@ -85,19 +83,48 @@ def test_comm_residual_roundtrip(tmp_path):
                    for x in jax.tree.leaves(state.comm_residual))
     assert res_norm > 0  # EF actually accumulated something
 
-    # graft a stale_queue on as well: both optional fields must coexist
-    queue = jax.tree.map(lambda x: jnp.stack([x, 2 * x]), state.global_params)
-    state = dc.replace(state, stale_queue=queue)
-
     path = save_state(str(tmp_path), state, 3)
     restored = load_state(path, jax.eval_shape(lambda: state))
     for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
-    # resume (sans the grafted queue) and check bit-identical continuation
-    live = dc.replace(state, stale_queue=None)
-    resumed = dc.replace(restored, stale_queue=None)
+    # resume and check bit-identical continuation
+    live, resumed = state, restored
     for i in range(3, 5):
+        live, _ = step(live, _batches(i))
+        resumed, _ = step(resumed, _batches(i))
+    for a, b in zip(jax.tree.leaves(live), jax.tree.leaves(resumed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_topo_roundtrip(tmp_path):
+    """The async server's clock/stamp/anchor buffers (MetaState.topo) are
+    the successor of the retired downpour stale_queue: a run halted
+    mid-staleness-window and resumed must continue bit-identically — a
+    clock or anchor reset would silently change which learners fire and
+    what displacement they push."""
+    from repro.configs.base import AsyncConfig, TopologyConfig
+
+    cfg = MAvgConfig(algorithm="mavg", num_learners=2, k_steps=2,
+                     learner_lr=0.1, momentum=0.6,
+                     topology=TopologyConfig(
+                         kind="async",
+                         server=AsyncConfig(staleness=2, step_time=(1, 3)),
+                     ))
+    params = mlp_init(jax.random.PRNGKey(2), 8, 16, 4)
+    step = jax.jit(make_meta_step(mlp_loss, cfg))
+    state = init_state(params, cfg)
+    # halt mid-window: step 2 is inside learner 1's 3-tick block
+    for i in range(2):
+        state, _ = step(state, _batches(i))
+    assert int(np.asarray(state.topo["clock"]).max()) > 0  # mid-block
+    path = save_state(str(tmp_path), state, 2)
+    restored = load_state(path, jax.eval_shape(lambda: state))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    live, resumed = state, restored
+    for i in range(2, 6):
         live, _ = step(live, _batches(i))
         resumed, _ = step(resumed, _batches(i))
     for a, b in zip(jax.tree.leaves(live), jax.tree.leaves(resumed)):

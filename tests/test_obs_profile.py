@@ -146,11 +146,14 @@ def test_prf4_profile_phases_covers_step_local_mix():
 
 
 @pytest.mark.slow
-def test_prf4_non_averaging_algorithm_skips_meta_mix():
+def test_prf4_aliased_algorithm_attributes_meta_mix():
+    """downpour is an alias onto the async server (one Topology protocol
+    for every algorithm), so its meta phase is attributable too."""
     cfg = MAvgConfig(algorithm="downpour", num_learners=L, k_steps=K,
                      learner_lr=0.1, momentum=0.6)
     params = mlp_init(jax.random.PRNGKey(0), D, H, C)
     state = init_state(params, cfg)
     rows = profile_phases(mlp_loss, cfg, state, _batches(), iters=2,
                           warmup=1)
-    assert [r["op"] for r in rows] == ["phase:step", "phase:local"]
+    assert [r["op"] for r in rows] == [
+        "phase:step", "phase:local", "phase:meta_mix"]
