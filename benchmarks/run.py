@@ -9,6 +9,7 @@
   T  topology_bench.py  meta-mixing topologies x comm (repro.topology)
   L  elastic_bench.py    elastic membership / hetero-K / time-varying gossip
   A  async_bench.py      async bounded-staleness server vs the barrier
+  X  chaos_bench.py      fault injection + supervised recovery (repro.chaos)
   P  pack_bench.py      packed flat meta-plane parity / launches (repro.pack)
   R  roofline_table.py  section Dry-run / Roofline aggregation
 
@@ -36,7 +37,7 @@ def main() -> None:
                     help="explicit form of the default (smoke-sized "
                          "suites); mutually exclusive with --full")
     ap.add_argument("--only", nargs="*", default=None,
-                    help="subset: convergence mu_p k baselines kernel comm topology elastic async pack roofline")
+                    help="subset: convergence mu_p k baselines kernel comm topology elastic async chaos pack roofline")
     ap.add_argument("--bench-dir", default="bench_out",
                     help="directory of the BENCH_<suite>.json trajectory "
                          "stores ('' = don't append)")
@@ -49,6 +50,7 @@ def main() -> None:
         ablations,
         async_bench,
         baselines,
+        chaos_bench,
         comm_bench,
         convergence,
         k_sweep,
@@ -66,6 +68,7 @@ def main() -> None:
         "topology": lambda: topology_bench.main(quick=quick),
         "elastic": lambda: elastic_bench.main(quick=quick),
         "async": lambda: async_bench.main(quick=quick),
+        "chaos": lambda: chaos_bench.main(quick=quick),
         "pack": lambda: pack_bench.main(quick=quick),
         "convergence": lambda: convergence.main(quick=quick),
         "baselines": lambda: baselines.main(quick=quick),

@@ -1,0 +1,38 @@
+"""repro.chaos — deterministic fault injection (DESIGN.md §13).
+
+A seeded, checkpointable ``FaultSchedule`` (compiled from a frozen
+``ChaosConfig``) rides alongside the run like the elastic membership
+schedule, composing injectors at every layer: NaN/Inf batches (data),
+bit-flip / scale payload corruption (comm), learner crash windows mapped
+onto the elastic membership mask (topology), straggler spikes on the
+async step-time profiles, and torn / corrupt checkpoint writes. Every
+injector off ⇒ bitwise-identical to today (pinned in tests/test_chaos.py).
+
+Recovery lives in ``core/supervisor.py``; the verified checkpoint chain
+in ``checkpoint/npz.py``.
+"""
+from repro.chaos.config import (
+    FAULT_KINDS,
+    STANDARD_KINDS,
+    ChaosConfig,
+    FaultSpec,
+    standard_chaos,
+)
+from repro.chaos.inject import (
+    PayloadCorruptor,
+    apply_chaos,
+    wrap_batch_fn,
+)
+from repro.chaos.schedule import FaultSchedule
+
+__all__ = [
+    "FAULT_KINDS",
+    "STANDARD_KINDS",
+    "ChaosConfig",
+    "FaultSchedule",
+    "FaultSpec",
+    "PayloadCorruptor",
+    "apply_chaos",
+    "standard_chaos",
+    "wrap_batch_fn",
+]

@@ -1,0 +1,170 @@
+"""Fault-injection configuration (``repro.chaos``, DESIGN.md §13).
+
+A chaos run is fully described by a frozen, hashable ``ChaosConfig``: a
+seed, a horizon, and a tuple of ``FaultSpec``s. Everything downstream —
+the compiled mask arrays of ``FaultSchedule``, the batch poisoner and
+payload corruptor of ``inject.py``, the crash membership schedule — is a
+pure function of this config (plus the supervisor's retry ``salt``), so
+a chaos run is deterministic, replayable from any checkpoint (faults are
+absolute-step indexed, like the elastic membership schedule), and
+config-validated up front rather than failing mid-run.
+
+Fault kinds, by the layer they perturb:
+
+  nan_batch / inf_batch   data (data/synthetic.py): the target learner's
+                          float batch leaves for the step are poisoned
+                          host-side. Int-token LM batches have no float
+                          leaves and are unaffected — NaN data is a
+                          float-pipeline fault.
+  payload_bitflip         comm (repro.comm): one seeded element of the
+                          target learner's post-local-phase plane gets
+                          one bit XOR-flipped (in-jit, real bitcast).
+  payload_scale           comm: the target learner's whole plane is
+                          scaled by ``magnitude`` (a mis-scaled wire
+                          payload — huge but finite).
+  crash                   topology (repro.topology): the learner is
+                          removed from the elastic membership mask for
+                          ``duration`` steps (mapped through the
+                          stochastic-complement rewiring, §8).
+  straggle                async server (§12): the learner's step-time
+                          profile entry gains ``magnitude`` extra ticks
+                          (the staleness bound is raised to stay valid).
+  torn_save / corrupt_save  checkpoint (checkpoint/npz.py): the save at
+                          ``step`` is torn (truncated, no sidecar) or
+                          bit-flipped post-write.
+
+``sticky``: a non-sticky fault is *transient* — it fires only on the
+first attempt (supervisor retry ``salt`` 0); after a rollback the replay
+is clean (a re-read batch, a re-sent payload). A sticky fault re-fires on
+every retry — the hardware is actually broken — which is how
+``recovery_exhausted`` is exercised.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+FAULT_KINDS = (
+    "nan_batch",
+    "inf_batch",
+    "payload_bitflip",
+    "payload_scale",
+    "crash",
+    "straggle",
+    "torn_save",
+    "corrupt_save",
+)
+
+# kinds that target a specific learner (the rest target the run)
+LEARNER_KINDS = (
+    "nan_batch", "inf_batch", "payload_bitflip", "payload_scale",
+    "crash", "straggle",
+)
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One injected fault.
+
+    kind       one of ``FAULT_KINDS``
+    step       absolute meta step the fault fires at
+    learner    target learner index (learner-targeted kinds; -1 draws one
+               deterministically from ``ChaosConfig.seed`` and ``step``)
+    duration   steps the fault persists (nan/inf bursts, crash windows)
+    magnitude  payload_scale multiplier / straggle extra ticks
+    bit        payload_bitflip: which bit of the f32 word to flip
+               (bf16 planes flip ``bit - 16``; bits below 16 are then
+               clamped to the sign of the mantissa head)
+    sticky     re-fires on supervisor retries (see module docstring)
+    """
+
+    kind: str
+    step: int
+    learner: int = -1
+    duration: int = 1
+    magnitude: float = 8.0
+    bit: int = 30
+    sticky: bool = False
+
+    def __post_init__(self):
+        assert self.kind in FAULT_KINDS, (
+            f"unknown fault kind {self.kind!r}; choose from {FAULT_KINDS}"
+        )
+        assert self.step >= 0, self.step
+        assert self.duration >= 1, self.duration
+        assert 0 <= self.bit <= 31, self.bit
+        if self.kind in ("torn_save", "corrupt_save"):
+            assert self.learner == -1, (
+                f"{self.kind} targets the run's save path, not a learner"
+            )
+
+
+@dataclass(frozen=True)
+class ChaosConfig:
+    """The whole fault schedule: seed + horizon + fault tuple (frozen,
+    hashable — rides in TrainConfig like every other config).
+
+    horizon    schedule length T in meta steps; every fault must fire and
+               expire within it (faults are compiled to (T, L) masks).
+               Also the period of the crash membership schedule, so keep
+               ``horizon >= meta_steps`` when crashes are injected — the
+               schedule then never wraps and quarantine windows map 1:1
+               onto absolute steps.
+    """
+
+    seed: int = 0
+    horizon: int = 64
+    faults: tuple = field(default_factory=tuple)
+
+    def __post_init__(self):
+        object.__setattr__(self, "faults", tuple(self.faults))
+        assert self.horizon >= 1, self.horizon
+        for f in self.faults:
+            assert isinstance(f, FaultSpec), f
+            assert f.step + f.duration <= self.horizon, (
+                f"fault {f.kind!r} at step {f.step} (duration "
+                f"{f.duration}) exceeds the chaos horizon {self.horizon}"
+            )
+
+    @property
+    def has_crash(self) -> bool:
+        return any(f.kind == "crash" for f in self.faults)
+
+    @property
+    def has_straggle(self) -> bool:
+        return any(f.kind == "straggle" for f in self.faults)
+
+
+STANDARD_KINDS = ("crash", "nan", "payload", "straggle", "torn_save")
+
+
+def standard_chaos(num_learners: int, meta_steps: int, *, seed: int = 0,
+                   kinds=STANDARD_KINDS) -> ChaosConfig:
+    """The bench's standard fault schedule (crash + NaN burst + payload
+    corruption + torn save — ISSUE 9's acceptance scenario), sized to the
+    run: faults land in the first half so the supervised run has room to
+    recover, the horizon covers the whole run so the crash schedule never
+    wraps. ``kinds`` selects a subset (CLI ``--chaos-faults``)."""
+    assert num_learners >= 2, num_learners
+    assert meta_steps >= 8, (
+        f"the standard chaos schedule needs >= 8 meta steps to place its "
+        f"faults, got {meta_steps}"
+    )
+    q = max(meta_steps // 8, 1)
+    faults = []
+    if "crash" in kinds:
+        faults.append(FaultSpec("crash", step=q, learner=1,
+                                duration=min(2 * q, meta_steps - q)))
+    if "nan" in kinds:
+        faults.append(FaultSpec("nan_batch", step=2 * q, learner=0))
+    if "payload" in kinds:
+        faults.append(FaultSpec("payload_scale", step=3 * q,
+                                learner=num_learners - 1, magnitude=64.0))
+        faults.append(FaultSpec("payload_bitflip", step=4 * q,
+                                learner=num_learners - 1))
+    if "straggle" in kinds:
+        faults.append(FaultSpec("straggle", step=0, learner=1,
+                                magnitude=1.0, duration=1))
+    if "torn_save" in kinds:
+        faults.append(FaultSpec("torn_save", step=5 * q))
+    return ChaosConfig(seed=seed, horizon=max(meta_steps, 8),
+                       faults=tuple(faults))

@@ -1,0 +1,226 @@
+"""Fault injectors: one per layer, each a no-op that is *bitwise*
+identical to today when its schedule is quiet (pinned in
+tests/test_chaos.py).
+
+  wrap_batch_fn      data layer — poisons the target learner's float
+                     batch leaves with NaN/Inf, host-side, before the
+                     jitted step ever sees them.
+  PayloadCorruptor   comm layer — in-jit corruption of the post-local-
+                     phase learner planes (the displacement payload the
+                     reducer is about to ship): whole-plane scale and a
+                     single real bit-flip via bitcast XOR. Quiet steps
+                     select the untouched input through ``jnp.where`` on
+                     an all-false mask, so the installed-but-idle
+                     corruptor is value-identical to no corruptor.
+  apply_chaos        topology layer — config transform: crash windows
+                     become rows of an *explicit* elastic membership
+                     schedule (masked through the stochastic-complement
+                     rewiring like any other absence, DESIGN.md §8), and
+                     straggle spikes land on the async server's step-time
+                     profile (with the staleness bound raised to keep the
+                     config valid).
+
+Checkpoint faults don't live here: ``FaultSchedule.save_fault`` feeds
+``checkpoint.save_state(fault=...)`` directly (the Trainer threads it).
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.chaos.config import ChaosConfig
+from repro.chaos.schedule import FaultSchedule
+from repro.configs.base import AsyncConfig, ElasticConfig, MAvgConfig
+
+
+def wrap_batch_fn(batch_fn, schedule: FaultSchedule):
+    """``batch_fn`` with the schedule's NaN/Inf batch faults applied to
+    the target learner's float leaves (leading axis L). Int-token LM
+    batches carry no float leaves and pass through untouched — NaN data
+    is a float-pipeline fault (document on the CLI). Returns ``batch_fn``
+    itself when the schedule has no batch faults."""
+    if not schedule.any_batch_faults:
+        return batch_fn
+
+    def wrapped(rng, step):
+        b = batch_fn(rng, step)
+        nan, inf = schedule.batch_fault_at(int(step))
+        if not (nan.any() or inf.any()):
+            return b
+
+        def poison(x):
+            x = np.asarray(x)
+            if not np.issubdtype(x.dtype, np.floating):
+                return x
+            x = np.array(x)
+            x[nan.astype(bool)] = np.nan
+            x[inf.astype(bool)] = np.inf
+            return x
+
+        return jax.tree.map(poison, b)
+
+    return wrapped
+
+
+def _broadcast(m, x):
+    return m.reshape((m.shape[0],) + (1,) * (x.ndim - 1))
+
+
+def _flip_one_element(x, xorm, pos):
+    """XOR the schedule's bit into ONE seeded element per learner of the
+    (L, ...) float plane ``x`` (a real bit-level flip through
+    ``lax.bitcast_convert_type``). ``xorm`` rows of 0 leave every word
+    untouched (x ^ 0 == x). bf16 planes flip ``bit - 16`` (the bf16 word
+    is the top half of the f32 word); f32-bits below 16 then flip
+    nothing."""
+    if x.dtype == jnp.float32:
+        itype, mask = jnp.int32, xorm
+    elif x.dtype == jnp.bfloat16:
+        itype = jnp.int16
+        mask = jax.lax.shift_right_logical(
+            xorm, jnp.int32(16)
+        ).astype(jnp.int16)
+    else:
+        return x
+    L = x.shape[0]
+    flat = x.reshape(L, -1)
+    n = flat.shape[1]
+    idx = pos % n
+    onehot = jnp.arange(n)[None, :] == idx[:, None]
+    words = jax.lax.bitcast_convert_type(flat, itype)
+    words = words ^ jnp.where(onehot, mask[:, None],
+                              jnp.zeros((), itype))
+    return jax.lax.bitcast_convert_type(words, x.dtype).reshape(x.shape)
+
+
+class PayloadCorruptor:
+    """In-jit payload corruption, gated on the compiled schedule arrays
+    (jit constants — the step stays a pure function of (state, batches)).
+
+    ``__call__(learners, step)`` scales every float leaf of the dirty
+    learners and bit-flips one seeded element of the first float leaf
+    (under packing that leaf IS the whole-model plane). Clean learners
+    and quiet steps take the untouched input through ``where`` on an
+    all-false mask — bitwise identity, not just numerical closeness.
+    """
+
+    def __init__(self, schedule: FaultSchedule):
+        T, L = schedule.cfg.horizon, schedule.num_learners
+
+        def pad(a, fill, dt):
+            return jnp.asarray(
+                np.concatenate([a, np.full((1, L), fill, a.dtype)], 0)
+            ).astype(dt)
+
+        # trailing all-clear row: steps beyond the horizon index it
+        self._scale = pad(schedule.scale, 1.0, jnp.float32)
+        self._xor = pad(schedule.xor, 0, jnp.int32)
+        self._pos = pad(schedule.pos, 0, jnp.int32)
+        self._T = T
+        self.active = schedule.any_payload_faults
+
+    def __call__(self, learners, step):
+        idx = jnp.minimum(step, self._T)
+        scale = jnp.take(self._scale, idx, axis=0)  # (L,)
+        xorm = jnp.take(self._xor, idx, axis=0)
+        pos = jnp.take(self._pos, idx, axis=0)
+        dirty = (scale != 1.0) | (xorm != 0)
+
+        leaves, treedef = jax.tree_util.tree_flatten(learners)
+        out, flipped = [], False
+        for x in leaves:
+            if not jnp.issubdtype(x.dtype, jnp.floating):
+                out.append(x)
+                continue
+            cor = (
+                x.astype(jnp.float32) * _broadcast(scale, x)
+            ).astype(x.dtype)
+            if not flipped:
+                cor = _flip_one_element(cor, xorm, pos)
+                flipped = True
+            out.append(jnp.where(_broadcast(dirty, x), cor, x))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _crash_membership(schedule: FaultSchedule, topo_cfg) -> np.ndarray:
+    """(horizon, L) membership rows: the configured elastic schedule (if
+    any) ANDed with the crash windows."""
+    crash = schedule.crash_schedule()
+    T, L = crash.shape
+    if topo_cfg.elastic is not None:
+        from repro.topology.elastic import membership_schedule
+
+        groups = topo_cfg.groups if topo_cfg.kind == "hierarchical" else 1
+        base = membership_schedule(L, topo_cfg.elastic, groups=groups)
+        P = base.shape[0]
+        rows = np.stack([base[s % P] for s in range(T)]) * crash
+    else:
+        rows = crash
+    if (rows.sum(axis=1) < 1.0).any():
+        bad = int(np.argmin(rows.sum(axis=1)))
+        raise ValueError(
+            f"chaos crash schedule leaves NO learner present at step "
+            f"{bad} (crash windows composed with the elastic schedule) — "
+            f"shrink the crash duration or the elastic drop_frac"
+        )
+    return rows
+
+
+def apply_chaos(mcfg: MAvgConfig, chaos: ChaosConfig, *,
+                salt: int = 0) -> MAvgConfig:
+    """The config-level injections: crash faults -> an explicit elastic
+    membership schedule, straggle faults -> the async step-time profile.
+    With neither fault kind present the config is returned UNCHANGED
+    (identical object — the off==bitwise pin needs no trust in config
+    plumbing)."""
+    # STRUCTURE is decided at salt 0, CONTENT at the caller's salt: a
+    # retry that drops a transient crash must still carry the membership
+    # schedule (now all-present rows) — the checkpointed topo buffers and
+    # the supervisor's quarantine lever both need the structure to
+    # persist across attempts, only the injected absences go away.
+    schedule0 = FaultSchedule(chaos, mcfg.num_learners, salt=0)
+    schedule = (
+        schedule0 if salt == 0
+        else FaultSchedule(chaos, mcfg.num_learners, salt=salt)
+    )
+    t = mcfg.topology
+    if not (schedule0.any_crash_faults or schedule0.straggle_extra.any()):
+        return mcfg
+    if schedule0.any_crash_faults:
+        if t.kind == "flat":
+            raise ValueError(
+                "chaos crash faults map onto the elastic membership mask, "
+                "which the flat topology has no mixing rows for — use "
+                "hierarchical / gossip / async (TopologyConfig.kind)"
+            )
+        rows = _crash_membership(schedule, t)
+        elastic = t.elastic if t.elastic is not None else ElasticConfig(
+            drop_frac=0.0
+        )
+        elastic = replace(
+            elastic, period=rows.shape[0],
+            schedule=tuple(tuple(float(v) for v in r) for r in rows),
+        )
+        t = replace(t, elastic=elastic)
+    if schedule0.straggle_extra.any():
+        if t.kind != "async":
+            raise ValueError(
+                "chaos straggle faults perturb the async server's "
+                "step-time profile — use TopologyConfig(kind='async')"
+            )
+        from repro.topology.async_server import step_time_profile
+
+        server = t.server if t.server is not None else AsyncConfig()
+        prof = schedule.straggled_profile(
+            step_time_profile(mcfg.num_learners, server)
+        )
+        server = replace(
+            server, step_time=prof,
+            staleness=max(server.staleness, max(prof) - 1),
+        )
+        t = replace(t, server=server)
+    return replace(mcfg, topology=t)

@@ -21,8 +21,10 @@ runs resume bit-identically on the packed path.
 """
 from __future__ import annotations
 
+import io
 import json
 import os
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -32,8 +34,23 @@ import numpy as np
 # per-leaf restore matches spec paths against npz keys, so both sides
 # must use the same helper
 from repro.pack import _path_key
+from repro.utils.retry import retry_io
 
 PACKSPEC_KEY = "__packspec__"
+
+# per-snapshot integrity sidecar: ``step_<n>.npz.crc32.json`` records the
+# byte size of the npz and a CRC32 + shape/dtype per entry, written
+# atomically AFTER the npz itself — a snapshot without a (matching)
+# sidecar is by definition unverified (torn mid-save)
+CRC_SUFFIX = ".crc32.json"
+
+
+class CheckpointVerifyError(RuntimeError):
+    """A snapshot failed integrity verification (torn write, bit rot,
+    entry-set mismatch, or — with ``check_finite`` — a poisoned state).
+    ``latest_verified_checkpoint`` skips such snapshots; the Supervisor
+    (core/supervisor.py) treats one raised at restore time like a
+    ``HealthHalt`` and rolls back further."""
 
 
 def _flatten(tree):
@@ -43,14 +60,56 @@ def _flatten(tree):
     return flat
 
 
-def save_state(directory: str, state, step: int, manifest=None) -> str:
-    """Snapshot ``state`` to ``directory/step_<step>.npz``.
+def _atomic_write(path: str, data: bytes) -> None:
+    """tmp + flush + fsync + rename — a reader never observes a partial
+    file at ``path``; transient OSErrors get the shared bounded retry."""
+
+    def write():
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+
+    retry_io(write)
+
+
+def _entry_crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+def save_state(directory: str, state, step: int, manifest=None, *,
+               keep: int = 0, fault=None) -> str:
+    """Snapshot ``state`` to ``directory/step_<step>.npz``, atomically and
+    with a CRC32 integrity sidecar.
+
+    The write order is the crash-safety contract: (1) the whole npz is
+    serialized in memory and landed via tmp + fsync + rename, (2) the
+    sidecar (``<path>.crc32.json``: npz byte size + per-entry CRC32 /
+    shape / dtype) lands the same way, (3) the directory ``manifest.json``
+    is rewritten, also atomically. A crash between any two leaves either
+    no new snapshot or an npz without a sidecar — both of which
+    ``latest_verified_checkpoint`` skips; it can never leave a snapshot
+    that verifies but restores garbage.
 
     ``manifest`` (optional): a ``repro.obs.run_manifest`` dict written to
     ``directory/manifest.json`` alongside the snapshots, so a checkpoint
     directory is self-describing — the config / topology / packspec-hash
     needed to resume it travels with it (DESIGN.md §11). Rewritten on
     every save (cheap, and a resumed run refreshes the environment info).
+
+    ``keep``: retention — after a successful save, prune snapshots older
+    than the ``keep`` newest sidecar-complete ones (0 = keep everything).
+    The survivors are the rollback chain the Supervisor walks.
+
+    ``fault``: chaos injection hook (repro.chaos, test/bench only):
+    ``"torn"`` writes a truncated npz at the final path with NO sidecar —
+    the pre-atomic failure mode (or a disk-level tear) the verified chain
+    exists to survive; ``"corrupt"`` completes the full atomic save and
+    then flips one byte of the final npz in place (post-write media rot,
+    caught by the CRC sidecar). ``None`` (the default) is the only
+    production value.
 
     Host-sync discipline: one ``jax.block_until_ready`` on the whole
     state up front, then the per-leaf ``np.asarray`` fetches are plain
@@ -72,11 +131,211 @@ def save_state(directory: str, state, step: int, manifest=None) -> str:
     spec = getattr(state, "spec", None)
     if spec is not None:
         flat[PACKSPEC_KEY] = np.asarray(json.dumps(spec.layout_dict()))
-    np.savez(path, **flat)
+    buf = io.BytesIO()
+    np.savez(buf, **flat)
+    data = buf.getvalue()
+    if fault == "torn":
+        # simulated mid-save crash: half the bytes at the FINAL path, no
+        # sidecar — exactly what the old non-atomic np.savez left behind
+        with open(path, "wb") as f:
+            f.write(data[: len(data) // 2])
+        return path
+    sidecar = {
+        "step": int(step),
+        "npz_bytes": len(data),
+        "entries": {
+            k: {
+                "crc32": _entry_crc(v),
+                "shape": list(np.shape(v)),
+                "dtype": str(np.asarray(v).dtype),
+            }
+            for k, v in flat.items()
+        },
+    }
+    _atomic_write(path, data)
+    _atomic_write(path + CRC_SUFFIX,
+                  json.dumps(sidecar, sort_keys=True).encode())
+    if fault == "corrupt":
+        with open(path, "r+b") as f:
+            f.seek(len(data) // 2)
+            b = f.read(1)
+            f.seek(len(data) // 2)
+            f.write(bytes([b[0] ^ 0x10]))
     if manifest is not None:
-        with open(os.path.join(directory, "manifest.json"), "w") as f:
-            json.dump(manifest, f, indent=2, sort_keys=True, default=str)
+        _atomic_write(
+            os.path.join(directory, "manifest.json"),
+            json.dumps(manifest, indent=2, sort_keys=True,
+                       default=str).encode(),
+        )
+    if keep:
+        prune_checkpoints(directory, keep)
     return path
+
+
+def _sidecar_ok(path: str) -> bool:
+    """Cheap (no-read-of-the-npz) verification: the sidecar exists, parses,
+    and records the npz's actual byte size — enough to distinguish a
+    completed atomic save from a torn one without paying a full CRC pass
+    (retention uses this; resume uses the full ``verify_checkpoint``)."""
+    try:
+        with open(path + CRC_SUFFIX) as f:
+            sc = json.load(f)
+        return sc.get("npz_bytes") == os.path.getsize(path)
+    except (OSError, ValueError):
+        return False
+
+
+def prune_checkpoints(directory: str, keep: int) -> list[str]:
+    """Delete snapshots older than the ``keep`` newest sidecar-complete
+    ones (their sidecars too, and any older torn/unverified leftovers —
+    useless for rollback). Returns the removed npz paths."""
+    assert keep >= 1, keep
+    if not os.path.isdir(directory):
+        return []
+    snaps = sorted(
+        f for f in os.listdir(directory)
+        if f.endswith(".npz") and not f.endswith(".npz.tmp")
+    )
+    verified = [f for f in snaps if _sidecar_ok(os.path.join(directory, f))]
+    if len(verified) <= keep:
+        return []
+    cutoff = verified[-keep]
+    removed = []
+    for f in snaps:
+        if f >= cutoff:
+            continue
+        p = os.path.join(directory, f)
+        try:
+            os.remove(p)
+            if os.path.exists(p + CRC_SUFFIX):
+                os.remove(p + CRC_SUFFIX)
+            removed.append(p)
+        except OSError:
+            pass  # retention is best-effort; verify guards correctness
+    return removed
+
+
+def verify_checkpoint(path: str, *, check_finite: bool = True) -> None:
+    """Raise ``CheckpointVerifyError`` unless ``path`` is a complete,
+    uncorrupted snapshot: sidecar present and parseable, npz size and
+    entry set match it, every entry's CRC32 matches, and (with
+    ``check_finite``) no float entry carries NaN/Inf — a snapshot of a
+    poisoned state is not a rollback target (semantic verification, the
+    "NaN never re-enters MetaState via resume" half of the chaos
+    contract)."""
+    try:
+        size = os.path.getsize(path)
+    except OSError as e:
+        raise CheckpointVerifyError(f"{path}: unreadable ({e})")
+    try:
+        with open(path + CRC_SUFFIX) as f:
+            sidecar = json.load(f)
+    except OSError:
+        raise CheckpointVerifyError(
+            f"{path}: no {CRC_SUFFIX} sidecar (save died before the "
+            f"sidecar landed, or a pre-integrity-chain snapshot)"
+        )
+    except ValueError as e:
+        raise CheckpointVerifyError(f"{path}: torn sidecar ({e})")
+    entries = sidecar.get("entries")
+    if not isinstance(entries, dict):
+        raise CheckpointVerifyError(f"{path}: sidecar has no entry table")
+    if sidecar.get("npz_bytes") != size:
+        raise CheckpointVerifyError(
+            f"{path}: size {size} != sidecar npz_bytes "
+            f"{sidecar.get('npz_bytes')} (torn write)"
+        )
+    try:
+        with np.load(path) as data:
+            keys, want = set(data.files), set(entries)
+            if keys != want:
+                raise CheckpointVerifyError(
+                    f"{path}: entry set mismatch vs sidecar (missing "
+                    f"{sorted(want - keys)[:4]}, extra "
+                    f"{sorted(keys - want)[:4]})"
+                )
+            for k, meta in entries.items():
+                arr = np.asarray(data[k])
+                if _entry_crc(arr) != meta.get("crc32"):
+                    raise CheckpointVerifyError(
+                        f"{path}: CRC32 mismatch on entry {k!r} (bit rot "
+                        f"or in-place corruption)"
+                    )
+                if check_finite:
+                    try:
+                        finite = bool(np.isfinite(arr).all())
+                    except TypeError:
+                        finite = True  # non-float / exotic dtypes
+                    if not finite:
+                        raise CheckpointVerifyError(
+                            f"{path}: non-finite values in entry {k!r} — "
+                            f"a poisoned snapshot is not a rollback target"
+                        )
+    except CheckpointVerifyError:
+        raise
+    except Exception as e:  # zip/zlib/np errors on a damaged archive
+        raise CheckpointVerifyError(f"{path}: unreadable npz ({e})")
+
+
+def checkpoint_step(path: str) -> int:
+    """Step encoded in a ``step_<n>.npz`` checkpoint filename."""
+    name = os.path.basename(path)
+    assert name.startswith("step_") and name.endswith(".npz"), path
+    return int(name[len("step_"): -len(".npz")])
+
+
+def verified_checkpoints(directory: str, *, before_step=None,
+                         check_finite: bool = True) -> list[str]:
+    """Ascending list of the snapshots in ``directory`` that pass
+    ``verify_checkpoint`` — the rollback chain the Supervisor walks.
+
+    ``before_step`` keeps only snapshots whose encoded step is strictly
+    below it. The Supervisor needs this because verification is
+    necessary but not sufficient for a rollback target: the emergency
+    halt snapshot of a *diverged-but-finite* state (a mis-scaled payload
+    blows the params up without ever minting a NaN) verifies cleanly,
+    and resuming from it replays the sick state forever. Integrity says
+    "this is exactly what was saved"; only causality — strictly before
+    the fault — says it is worth resuming from."""
+    if not os.path.isdir(directory):
+        return []
+    files = sorted(
+        f for f in os.listdir(directory)
+        if f.endswith(".npz") and not f.endswith(".npz.tmp")
+    )
+    out = []
+    for f in files:
+        path = os.path.join(directory, f)
+        if before_step is not None and checkpoint_step(path) >= before_step:
+            continue
+        try:
+            verify_checkpoint(path, check_finite=check_finite)
+            out.append(path)
+        except CheckpointVerifyError:
+            continue
+    return out
+
+
+def latest_verified_checkpoint(directory: str, *,
+                               check_finite: bool = True):
+    """Newest snapshot in ``directory`` that passes ``verify_checkpoint``
+    (None when none does) — the resume/rollback entry point: torn,
+    corrupt and (by default) non-finite snapshots are skipped, walking
+    back through the retention chain."""
+    if not os.path.isdir(directory):
+        return None
+    files = sorted(
+        f for f in os.listdir(directory)
+        if f.endswith(".npz") and not f.endswith(".npz.tmp")
+    )
+    for f in reversed(files):
+        path = os.path.join(directory, f)
+        try:
+            verify_checkpoint(path, check_finite=check_finite)
+            return path
+        except CheckpointVerifyError:
+            continue
+    return None
 
 
 def _is_packed_plane(spec, leaf) -> bool:

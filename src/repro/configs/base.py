@@ -265,15 +265,38 @@ class ElasticConfig:
                 topology bit-for-bit, pinned in tests/test_elastic.py)
     seed        PRNG stream the schedule is drawn from; every group keeps
                 at least one present learner regardless
+    schedule    explicit (period, L) 0/1 rows overriding the drawn
+                schedule — how repro.chaos maps crash windows (and the
+                supervisor maps quarantine) onto membership. When set,
+                ``period`` must equal ``len(schedule)`` and every row
+                must keep at least one learner present; drop_frac/seed
+                are ignored.
     """
 
     period: int = 8
     drop_frac: float = 0.25
     seed: int = 0
+    schedule: Optional[tuple] = None
 
     def __post_init__(self):
         assert self.period >= 1, self.period
         assert 0.0 <= self.drop_frac < 1.0, self.drop_frac
+        if self.schedule is not None:
+            rows = tuple(
+                tuple(float(v) for v in row) for row in self.schedule
+            )
+            object.__setattr__(self, "schedule", rows)
+            assert len(rows) == self.period, (
+                f"explicit membership schedule has {len(rows)} rows for "
+                f"period={self.period}"
+            )
+            L = len(rows[0])
+            for t, row in enumerate(rows):
+                assert len(row) == L, (t, len(row), L)
+                assert all(v in (0.0, 1.0) for v in row), (t, row)
+                assert sum(row) >= 1.0, (
+                    f"membership schedule row {t} has no present learner"
+                )
 
 
 ASYNC_UPDATES = ("mavg", "elastic")
@@ -464,6 +487,16 @@ class MAvgConfig:
     # interactive/debug paths (and any caller that re-reads the
     # pre-step state) need.
     donate: bool = True
+    # in-step finite guard (repro.chaos / DESIGN.md §13): after the local
+    # phase (and any injected payload corruption), learners whose planes
+    # carry NaN/Inf are reset to the broadcast global params (zero
+    # displacement — the poisoned block is skipped, momentum pure-decays
+    # when every learner is bad) and counted in the nonfinite_learners
+    # metric, so a non-finite value can never reach MetaState's global
+    # params through the mix. Off (default) the code path is untouched;
+    # on with a clean run the guard is bitwise-invisible (where on an
+    # all-true mask) — both pinned in tests/test_chaos.py.
+    finite_guard: bool = False
     # meta-communication compression (repro.comm); dense = exact average
     comm: CommConfig = field(default_factory=CommConfig)
     # meta-level mixing topology (repro.topology); flat = all-reduce
@@ -585,6 +618,18 @@ class TrainConfig:
     log_every: int = 1
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0
+    # retention: keep the last N sidecar-verified snapshots as the
+    # rollback chain (checkpoint.prune_checkpoints); 0 keeps everything
+    checkpoint_keep: int = 0
+    # deterministic fault injection (repro.chaos): a ChaosConfig whose
+    # FaultSchedule the Trainer compiles and threads through the batch
+    # stream, the jitted step and the checkpoint writer; None = off
+    # (typed loosely to keep configs free of a chaos import)
+    chaos: Optional[object] = None
+    # supervisor retry salt: folded into the data stream so a rolled-back
+    # attempt redraws the poisoned block's batches (and FaultSchedule
+    # drops non-sticky faults); 0 on every first attempt
+    data_salt: int = 0
     # telemetry (repro.obs): sink/tracing knobs; the device metric ring is
     # always on (it IS the metrics path), the knobs decide where it lands
     obs: ObsConfig = field(default_factory=ObsConfig)

@@ -1,4 +1,10 @@
 # The paper's primary contribution: M-AVG (K-step averaging SGD with block
 # momentum) and its baselines, as a composable meta-optimizer.
 from repro.core.meta import MetaState, init_state, make_meta_step, meta_step
+from repro.core.supervisor import (
+    RecoveryExhausted,
+    RecoveryPlan,
+    RecoveryPolicy,
+    Supervisor,
+)
 from repro.core.trainer import Trainer

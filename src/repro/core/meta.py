@@ -269,6 +269,70 @@ def _local_phase(loss_fn: LossFn, learners, local_mom, batches, cfg: MAvgConfig,
             loss_l, active)
 
 
+def _learner_finite_mask(tree):
+    """(L,) bool — True where every float element of learner j's planes is
+    finite. None when the tree has no float leaves."""
+    flags = None
+    for x in jax.tree.leaves(tree):
+        if not jnp.issubdtype(x.dtype, jnp.floating):
+            continue
+        ok = jnp.all(
+            jnp.isfinite(x.astype(jnp.float32)).reshape(x.shape[0], -1),
+            axis=1,
+        )
+        flags = ok if flags is None else (flags & ok)
+    return flags
+
+
+def _tree_where_learners(ok, new, old):
+    """Leafwise select on the (L,) mask broadcast over trailing dims."""
+
+    def sel(n, o):
+        m = ok.reshape((n.shape[0],) + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+
+    return jax.tree.map(sel, new, old)
+
+
+def _finite_guard(learners, local_mom, gp, metrics, L):
+    """The in-step skip-and-decay barrier (DESIGN.md §13): a learner whose
+    post-local-phase planes (or local momentum) carry NaN/Inf is reset to
+    the broadcast global params — zero displacement into the mix, so the
+    poisoned block is skipped and (with every learner bad) the block
+    momentum pure-decays — and its local momentum is zeroed. This is the
+    structural guarantee that a non-finite value can never cross from the
+    learner plane into ``MetaState.global_params``: the mean of finite
+    planes is finite. On a clean step the mask is all-true and every
+    ``where`` returns its first argument bitwise (pinned)."""
+    ok = _learner_finite_mask(learners)
+    if local_mom is not None:
+        mok = _learner_finite_mask(local_mom)
+        if mok is not None:
+            ok = mok if ok is None else (ok & mok)
+    if ok is None:
+        return learners, local_mom, metrics
+    clean = tree_broadcast_learners(tree_cast_like(gp, learners), L)
+    learners = _tree_where_learners(ok, learners, clean)
+    if local_mom is not None:
+        zeros = jax.tree.map(jnp.zeros_like, local_mom)
+        local_mom = _tree_where_learners(ok, local_mom, zeros)
+    metrics["nonfinite_learners"] = (
+        jnp.float32(L) - ok.sum().astype(jnp.float32)
+    )
+    return learners, local_mom, metrics
+
+
+def tree_cast_like(tree, like):
+    """``tree`` cast leafwise to the dtypes of ``like``'s leaves (shapes
+    may differ — only dtype is taken)."""
+    like_leaves = jax.tree.leaves(like)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return jax.tree_util.tree_unflatten(
+        treedef,
+        [x.astype(y.dtype) for x, y in zip(leaves, like_leaves)],
+    )
+
+
 def _loss_spread(loss_l, active):
     """max - min of the per-learner mean losses, over ACTIVE learners only
     (elastic membership: an absent learner ran 0 steps and reports no
@@ -287,7 +351,8 @@ def _loss_spread(loss_l, active):
 
 
 def meta_step(state: MetaState, batches, *, loss_fn: LossFn, cfg: MAvgConfig,
-              lr=None, reducer=None, topology=None) -> tuple[MetaState, dict]:
+              lr=None, reducer=None, topology=None,
+              chaos=None) -> tuple[MetaState, dict]:
     """One meta-iteration n -> n+1 of Algorithm 1 (or a baseline).
 
     batches: pytree with leaves (L, K, B_local, ...) — K local mini-batches
@@ -296,6 +361,12 @@ def meta_step(state: MetaState, batches, *, loss_fn: LossFn, cfg: MAvgConfig,
     overrides the mixing structure built from ``cfg.topology``
     (repro.topology.make_topology). Prefer make_meta_step, which builds
     both once per trace.
+
+    ``chaos``: optional payload corruptor (repro.chaos.PayloadCorruptor)
+    called on the post-local-phase learner planes — the comm-layer fault
+    injection point, placed exactly where the reducer picks the payload
+    up. ``cfg.finite_guard`` then screens the (possibly corrupted)
+    planes before the mix (see ``_finite_guard``).
     """
     lr = jnp.float32(cfg.learner_lr) if lr is None else lr
     if topology is None:
@@ -320,6 +391,15 @@ def meta_step(state: MetaState, batches, *, loss_fn: LossFn, cfg: MAvgConfig,
         "grad_norm": gnorm,
         "loss_spread": _loss_spread(loss_l, active),
     }
+
+    if chaos is not None:
+        with jax.named_scope("chaos.payload"):
+            learners = chaos(learners, state.step)
+    if cfg.finite_guard:
+        with jax.named_scope("chaos.finite_guard"):
+            learners, local_mom, metrics = _finite_guard(
+                learners, local_mom, gp, metrics, cfg.num_learners
+            )
 
     with jax.named_scope("obs.meta_mix"):
         gp, v, learners, comm_res, topo, topo_metrics = topology.mix(
@@ -352,18 +432,21 @@ def _ldtype(learners):
 
 
 def make_meta_step(loss_fn: LossFn, cfg: MAvgConfig, reducer=None,
-                   topology=None):
+                   topology=None, chaos=None):
     """Returns a jit-able ``step(state, batches) -> (state, metrics)``.
 
     The topology (and through it the comm reducer(s), plus the effective
     block-momentum coefficient — kavg forces mu = 0) is resolved once
     here, not per meta_step call, so every trace reuses the same objects.
+    ``chaos`` (a PayloadCorruptor or None) is likewise baked into the
+    closure — its schedule arrays become jit constants.
     """
     if topology is None:
         from repro.topology import make_topology
 
         topology = make_topology(cfg, reducer)
-    return partial(meta_step, loss_fn=loss_fn, cfg=cfg, topology=topology)
+    return partial(meta_step, loss_fn=loss_fn, cfg=cfg, topology=topology,
+                   chaos=chaos)
 
 
 # position of the MetaState argument in every ``step(state, batches, ...)``
@@ -373,7 +456,8 @@ STATE_ARGNUM = 0
 
 
 def make_jit_meta_step(loss_fn: LossFn, cfg: MAvgConfig, reducer=None,
-                       topology=None, *, donate=None, **jit_kwargs):
+                       topology=None, chaos=None, *, donate=None,
+                       **jit_kwargs):
     """``make_meta_step`` wrapped in ``jax.jit`` with MetaState donation.
 
     Under ``cfg.donate`` (override with ``donate=``) the input state is
@@ -391,7 +475,7 @@ def make_jit_meta_step(loss_fn: LossFn, cfg: MAvgConfig, reducer=None,
     launch/specs.py) pass through; the state's in_shardings must equal
     its out_shardings or XLA cannot alias the donated buffers.
     """
-    step_fn = make_meta_step(loss_fn, cfg, reducer, topology)
+    step_fn = make_meta_step(loss_fn, cfg, reducer, topology, chaos)
     if cfg.donate if donate is None else donate:
         jit_kwargs.setdefault("donate_argnums", (STATE_ARGNUM,))
     return jax.jit(step_fn, **jit_kwargs)

@@ -63,8 +63,42 @@ class Trainer:
         self.mesh = mesh
         self._state_shardings = state_shardings if mesh is not None else None
 
+        # fault injection (repro.chaos, DESIGN.md §13): compile the
+        # schedule once and thread each layer's injector to its layer —
+        # the config transform (crash -> elastic membership, straggle ->
+        # async profile) BEFORE the topology is built, the batch poisoner
+        # around batch_fn, the payload corruptor into the jitted step,
+        # and save faults into the checkpoint writer (see run()). With
+        # chaos None every one of these is the untouched original object.
+        self._chaos_schedule = None
+        chaos_corruptor = None
+        if train_cfg.chaos is not None:
+            from repro.chaos import (
+                FaultSchedule,
+                PayloadCorruptor,
+                apply_chaos,
+                wrap_batch_fn,
+            )
+
+            self.mcfg = apply_chaos(
+                self.mcfg, train_cfg.chaos, salt=train_cfg.data_salt
+            )
+            self._chaos_schedule = FaultSchedule(
+                train_cfg.chaos, self.mcfg.num_learners,
+                salt=train_cfg.data_salt,
+            )
+            self.batch_fn = wrap_batch_fn(batch_fn, self._chaos_schedule)
+            if self._chaos_schedule.any_payload_faults:
+                chaos_corruptor = PayloadCorruptor(self._chaos_schedule)
+
         rng = jax.random.PRNGKey(train_cfg.seed)
         self.data_rng, init_rng = jax.random.split(rng)
+        if train_cfg.data_salt:
+            # supervisor retries redraw the data stream (the transient
+            # non-sticky faults already dropped out of the schedule above)
+            self.data_rng = jax.random.fold_in(
+                self.data_rng, train_cfg.data_salt
+            )
         params = init_params_fn(init_rng)
         # one topology instance serves state init, the jitted step, and
         # the host-side effective-samples accounting (work_completed) —
@@ -74,7 +108,8 @@ class Trainer:
         self._topology = make_topology(self.mcfg)
         self.state = init_state(params, self.mcfg, topology=self._topology)
         self._step_fn = make_meta_step(
-            loss_fn, self.mcfg, topology=self._topology
+            loss_fn, self.mcfg, topology=self._topology,
+            chaos=chaos_corruptor,
         )
 
         # telemetry is built lazily at the first run() iteration: the
@@ -320,10 +355,16 @@ class Trainer:
                         and self.cfg.checkpoint_every
                         and (step + 1) % self.cfg.checkpoint_every == 0
                     ):
+                        fault = (
+                            self._chaos_schedule.save_fault(step + 1)
+                            if self._chaos_schedule is not None else None
+                        )
                         with self.tracer.span("obs.checkpoint_io"):
                             save_state(
                                 self.cfg.checkpoint_dir, self.state, step + 1,
                                 manifest=self.manifest,
+                                keep=self.cfg.checkpoint_keep,
+                                fault=fault,
                             )
                 flush()  # the final (possibly partial) log window
                 maybe_halt(start + n - 1)
@@ -338,6 +379,55 @@ class Trainer:
         # a sink opened after restore appends to the existing run log
         # instead of truncating it (resume continues the same run)
         self._restored = True
+
+    def set_membership(self, membership):
+        """Replace the elastic membership schedule in-state (the
+        supervisor's quarantine lever, DESIGN.md §13): new (period, L)
+        0/1 rows are swapped into ``MetaState.topo["membership"]`` —
+        masked through the stochastic-complement rewiring like any other
+        absence — and the topology's host-side mirror (the async server's
+        effective-work replay) is reset to match. Only valid on a run
+        that has a membership schedule (an elastic config or chaos crash
+        faults); must preserve the schedule's shape."""
+        import numpy as np
+
+        topo = self.state.topo
+        if not (isinstance(topo, dict) and "membership" in topo):
+            raise ValueError(
+                "set_membership needs a run with an elastic membership "
+                "schedule (TopologyConfig.elastic or chaos crash faults)"
+            )
+        m = np.asarray(membership, np.float32)
+        old = np.asarray(topo["membership"])
+        if m.shape != old.shape:
+            raise ValueError(
+                f"membership shape {m.shape} != schedule shape {old.shape}"
+            )
+        if (m.sum(axis=1) < 1.0).any():
+            raise ValueError(
+                "quarantine membership leaves a row with no learner present"
+            )
+        from dataclasses import replace as _dc_replace
+
+        new_topo = dict(topo)
+        new_topo["membership"] = jnp.asarray(m)
+        self.state = _dc_replace(self.state, topo=new_topo)
+        if getattr(self._topology, "membership", None) is not None:
+            self._topology.membership = m
+            if hasattr(self._topology, "_sim_clock"):
+                # invalidate the async server's completed-work replay —
+                # it re-simulates from tick 0 under the new schedule
+                self._topology._sim_clock = self._topology.start_clock.copy()
+                self._topology._sim_t = 0
+                self._topology._sim_cum = []
+
+    def emit(self, record: dict):
+        """Append one structured record to the run's telemetry sink (the
+        supervisor's fault/recovery records ride the same log as the
+        step rows). No-op when no sink is configured/open."""
+        if self._sink is not None:
+            self._sink.append(record)
+            self._sink.flush()
 
     def close(self):
         """Flush and close the telemetry sink (idempotent)."""

@@ -130,8 +130,47 @@ def main() -> None:
                     help="measured-vs-modeled phase attribution rows "
                          "(obs.profile) recorded once before step 0")
     ap.add_argument("--resume", action="store_true",
-                    help="restore the latest checkpoint from "
-                         "--checkpoint-dir and append to the run log")
+                    help="restore the latest VERIFIED checkpoint from "
+                         "--checkpoint-dir (torn/corrupt snapshots are "
+                         "skipped via the CRC sidecar chain; falls back "
+                         "to the newest unverified one) and append to "
+                         "the run log")
+    ap.add_argument("--checkpoint-every", type=int, default=10,
+                    help="checkpoint cadence in meta steps (with "
+                         "--checkpoint-dir)")
+    ap.add_argument("--checkpoint-keep", type=int, default=0,
+                    help="retain only the last N verified snapshots "
+                         "(0 = keep everything)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="deterministic fault injection (repro.chaos): "
+                         "run under the standard fault schedule sized to "
+                         "--steps/--learners. NOTE: int-token LM batches "
+                         "carry no float leaves, so the nan fault kind "
+                         "perturbs nothing here — use crash/payload/"
+                         "straggle/torn_save")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed of the standard chaos schedule")
+    ap.add_argument("--chaos-faults", default=None,
+                    help="comma subset of the standard fault kinds "
+                         "(crash,nan,payload,straggle,torn_save); "
+                         "default all")
+    ap.add_argument("--finite-guard", action="store_true",
+                    help="in-step NaN/Inf barrier: poisoned learner "
+                         "planes are reset to the broadcast global "
+                         "params before the mix (MAvgConfig.finite_guard)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="wrap the run in core.supervisor.Supervisor: "
+                         "on a health halt / checkpoint-verify failure, "
+                         "roll back to the last verified snapshot and "
+                         "retry with recovery policies (requires "
+                         "--checkpoint-dir)")
+    ap.add_argument("--supervise-retries", type=int, default=3,
+                    help="supervisor retry budget before "
+                         "RecoveryExhausted")
+    ap.add_argument("--supervise-quarantine", type=int, default=0,
+                    help="probation window (meta steps) a suspect "
+                         "learner is quarantined from membership after "
+                         "rollback (0 = never)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -166,55 +205,118 @@ def main() -> None:
         )
         if args.topology == "async" else None
     )
-    mcfg = MAvgConfig(
-        algorithm=args.algorithm, num_learners=args.learners, k_steps=args.k,
-        learner_lr=args.lr, momentum=args.momentum,
-        comm=CommConfig(scheme=args.comm, k_frac=args.comm_k_frac,
-                        error_feedback=not args.no_error_feedback),
-        topology=TopologyConfig(
-            kind=args.topology, groups=args.groups,
-            outer_every=args.outer_every, outer_momentum=args.outer_momentum,
-            graph=args.gossip_graph, outer_comm=outer_comm,
-            group_k=group_k, elastic=elastic, server=server,
-        ),
-    )
-    tcfg = TrainConfig(
-        model=cfg, mavg=mcfg, batch_per_learner=args.batch, seq_len=args.seq,
-        meta_steps=args.steps, checkpoint_dir=args.checkpoint_dir,
-        checkpoint_every=10 if args.checkpoint_dir else 0,
-        obs=ObsConfig(sink=args.obs_sink, run_dir=args.run_dir,
-                      trace=args.trace, profiler=args.profiler,
-                      cost_analysis=args.obs_cost,
-                      health=args.obs_health,
-                      health_halt=not args.obs_no_halt,
-                      attribution=args.obs_attribution),
-    )
+    chaos_cfg = None
+    if args.chaos:
+        from repro.chaos import STANDARD_KINDS, standard_chaos
+
+        kinds = (
+            tuple(k.strip() for k in args.chaos_faults.split(","))
+            if args.chaos_faults else STANDARD_KINDS
+        )
+        unknown = set(kinds) - set(STANDARD_KINDS)
+        if unknown:
+            raise SystemExit(
+                f"--chaos-faults: unknown kinds {sorted(unknown)}; choose "
+                f"from {STANDARD_KINDS}"
+            )
+        chaos_cfg = standard_chaos(
+            args.learners, args.steps, seed=args.chaos_seed, kinds=kinds
+        )
+    if args.supervise and not args.checkpoint_dir:
+        raise SystemExit("--supervise needs --checkpoint-dir (the "
+                         "verified rollback chain lives there)")
+
+    def make_mcfg(momentum_scale: float = 1.0) -> MAvgConfig:
+        return MAvgConfig(
+            algorithm=args.algorithm, num_learners=args.learners,
+            k_steps=args.k, learner_lr=args.lr,
+            momentum=args.momentum * momentum_scale,
+            finite_guard=args.finite_guard,
+            comm=CommConfig(scheme=args.comm, k_frac=args.comm_k_frac,
+                            error_feedback=not args.no_error_feedback),
+            topology=TopologyConfig(
+                kind=args.topology, groups=args.groups,
+                outer_every=args.outer_every,
+                outer_momentum=args.outer_momentum,
+                graph=args.gossip_graph, outer_comm=outer_comm,
+                group_k=group_k, elastic=elastic, server=server,
+            ),
+        )
 
     def loss_fn(params, batch):
         return model_api.loss_fn(params, cfg, batch)
 
-    trainer = Trainer(
-        tcfg,
-        loss_fn,
-        init_params_fn=lambda rng: model_api.init_params(rng, cfg),
-        batch_fn=lm_batch_fn(cfg, args.learners, args.k, args.batch, args.seq),
-        lr_schedule=warmup_cosine(args.lr, 5, args.steps),
-    )
-    if args.resume:
-        from repro.checkpoint import latest_checkpoint
+    def make_trainer(plan) -> Trainer:
+        tcfg = TrainConfig(
+            model=cfg, mavg=make_mcfg(plan.momentum_scale),
+            batch_per_learner=args.batch, seq_len=args.seq,
+            meta_steps=args.steps, checkpoint_dir=args.checkpoint_dir,
+            checkpoint_every=(
+                args.checkpoint_every if args.checkpoint_dir else 0
+            ),
+            checkpoint_keep=args.checkpoint_keep,
+            chaos=chaos_cfg, data_salt=plan.data_salt,
+            obs=ObsConfig(sink=args.obs_sink, run_dir=args.run_dir,
+                          trace=args.trace, profiler=args.profiler,
+                          cost_analysis=args.obs_cost,
+                          health=args.obs_health,
+                          health_halt=not args.obs_no_halt,
+                          attribution=args.obs_attribution),
+        )
+        return Trainer(
+            tcfg,
+            loss_fn,
+            init_params_fn=lambda rng: model_api.init_params(rng, cfg),
+            batch_fn=lm_batch_fn(cfg, args.learners, args.k, args.batch,
+                                 args.seq),
+            lr_schedule=warmup_cosine(args.lr * plan.lr_scale, 5,
+                                      args.steps),
+        )
 
-        ckpt = latest_checkpoint(args.checkpoint_dir or "")
-        if ckpt is None:
-            raise SystemExit("--resume: no checkpoint in --checkpoint-dir")
-        trainer.restore(ckpt)
-        print(f"resumed from {ckpt}")
-    history = trainer.run()
+    if args.supervise:
+        from repro.core.supervisor import (
+            RecoveryPolicy,
+            Supervisor,
+        )
+
+        sup = Supervisor(
+            make_trainer,
+            target_steps=args.steps,
+            checkpoint_dir=args.checkpoint_dir,
+            policy=RecoveryPolicy(
+                max_retries=args.supervise_retries,
+                quarantine_steps=args.supervise_quarantine,
+            ),
+        )
+        trainer, history = sup.run()
+    else:
+        from repro.core.supervisor import RecoveryPlan
+
+        trainer = make_trainer(RecoveryPlan())
+        if args.resume:
+            from repro.checkpoint import (
+                latest_checkpoint,
+                latest_verified_checkpoint,
+            )
+
+            ckpt = (
+                latest_verified_checkpoint(args.checkpoint_dir or "")
+                or latest_checkpoint(args.checkpoint_dir or "")
+            )
+            if ckpt is None:
+                raise SystemExit(
+                    "--resume: no checkpoint in --checkpoint-dir"
+                )
+            trainer.restore(ckpt)
+            print(f"resumed from {ckpt}")
+        history = trainer.run()
 
     eval_batch = lm_eval_set(cfg, n=32, seq_len=args.seq)
     loss, _ = jax.jit(loss_fn)(unpack_params(trainer.state), eval_batch)
     print(f"\nfinal train loss {history[-1]['loss']:.4f}  "
           f"eval loss {float(loss):.4f}  "
           f"samples {history[-1]['samples']}")
+    trainer.close()
 
 
 if __name__ == "__main__":

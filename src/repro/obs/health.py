@@ -103,6 +103,16 @@ DEFAULT_RULES = (
     # from synchronous runs (absent metric -> rule skipped)
     HealthRule("staleness_runaway", "staleness_p99", "max",
                threshold=32.0),
+    # supervised recovery (core/supervisor.py, DESIGN.md §13): the
+    # supervisor feeds these synthetic metrics into its own monitor so
+    # checkpoint-chain damage and retry exhaustion surface as the same
+    # schema-valid alert records every other failure mode gets. Both
+    # metrics are absent from ordinary step records, so the rules are
+    # skipped on every normal run.
+    HealthRule("checkpoint_verify_failed", "ckpt_verify_failed", "max",
+               threshold=0.0, severity="warn"),
+    HealthRule("recovery_exhausted", "recovery_exhausted", "max",
+               threshold=0.0, severity="fatal"),
 )
 
 
@@ -211,6 +221,18 @@ class HealthMonitor:
         if reference is not None:
             alert["reference"] = float(reference)
         return alert
+
+    def seed(self, records) -> None:
+        """Pre-load the rel_* trailing windows from historical records
+        WITHOUT evaluating any rule. A rolled-back retry remembers its
+        pre-fault medians (core/supervisor.py seeds the rebuilt
+        trainer's monitor with the history below the resume step) —
+        otherwise a short retry diverges silently inside ``min_history``
+        and the rel_* watchdogs never arm."""
+        for rec in records:
+            for metric, hist in self._hist.items():
+                if metric in rec and _finite(rec[metric]):
+                    hist.append(float(rec[metric]))
 
     def observe(self, records) -> list[dict]:
         fired = []

@@ -20,8 +20,11 @@ import jax
 # history: 1 = PR 6 (manifest/step/row kinds); 2 = PR 7 (adds the
 # ``alert`` and ``attribution`` record kinds — additive, so v1 readers
 # that skip unknown kinds still parse v2 streams, but a v1 VALIDATOR
-# must reject them: tools/check_telemetry.py gates on the major)
-SCHEMA_VERSION = 2
+# must reject them: tools/check_telemetry.py gates on the major);
+# 3 = PR 9 (adds the ``fault`` and ``recovery`` record kinds of
+# core/supervisor.py plus the optional ``nonfinite_learners`` step
+# metric — additive again, same major-gating story)
+SCHEMA_VERSION = 3
 
 
 def packspec_hash(spec) -> str | None:

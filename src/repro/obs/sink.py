@@ -22,6 +22,8 @@ import json
 import os
 from typing import Optional
 
+from repro.utils.retry import retry_io
+
 
 class Sink:
     """Protocol: open_run(manifest) once per (re)open, append(record) per
@@ -91,10 +93,14 @@ class JsonlSink(Sink):
         self._write(rec)
 
     def _write(self, obj: dict) -> None:
-        self._f.write(json.dumps(obj, sort_keys=True, default=_jsonify) + "\n")
+        # transient OSErrors (NFS hiccup, disk-pressure EAGAIN) get the
+        # shared bounded retry/backoff treatment — the same helper the
+        # checkpoint writer's atomic rename uses (repro.utils.retry)
+        line = json.dumps(obj, sort_keys=True, default=_jsonify) + "\n"
+        retry_io(lambda: self._f.write(line))
 
     def flush(self) -> None:
-        self._f.flush()
+        retry_io(self._f.flush)
 
     def close(self) -> None:
         if not self._f.closed:

@@ -54,9 +54,26 @@ def membership_schedule(L: int, elastic: ElasticConfig, *,
     Per scheduled step, ``round(drop_frac * L)`` learners are absent,
     chosen by seeded permutation subject to every group keeping at least
     one present member (a fully-absent group has no average to take).
+
+    An explicit ``elastic.schedule`` (how repro.chaos maps crash windows
+    and the supervisor maps quarantine onto membership) wins over the
+    drawn schedule verbatim — same validation: row length L, every group
+    keeps >= 1 present member per row.
     """
     assert L >= 1 and L % groups == 0, (L, groups)
     S = L // groups
+    if elastic.schedule is not None:
+        sched = np.asarray(elastic.schedule, np.float32)
+        assert sched.shape == (elastic.period, L), (
+            f"explicit elastic schedule has shape {sched.shape}, expected "
+            f"(period={elastic.period}, L={L})"
+        )
+        per_group = sched.reshape(elastic.period, groups, S).sum(axis=2)
+        assert (per_group >= 1.0).all(), (
+            "explicit elastic schedule leaves a group with no present "
+            "learner in some row"
+        )
+        return sched
     rng = np.random.RandomState(elastic.seed)
     n_drop = min(int(round(elastic.drop_frac * L)), L - 1)
     sched = np.ones((elastic.period, L), np.float32)

@@ -1,3 +1,4 @@
+from repro.utils.retry import retry_io
 from repro.utils.tree import (
     tree_zeros_like,
     tree_add,

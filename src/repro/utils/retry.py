@@ -1,0 +1,40 @@
+"""Bounded retry with exponential backoff for transient I/O errors.
+
+The one retry helper in the repo (DESIGN.md §13): checkpoint writes
+(checkpoint/npz.py) and run-log appends (obs.sink.JsonlSink) share it, so
+a transient ``OSError`` — NFS hiccup, disk-pressure EAGAIN, a flaky
+container overlay — costs a few milliseconds of backoff instead of a
+dead run. It retries *transient* failure classes only and re-raises the
+last error when the budget is exhausted: a genuinely broken path fails
+loudly after ``attempts`` tries, never silently.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple, Type
+
+
+def retry_io(
+    fn: Callable,
+    *,
+    attempts: int = 4,
+    base_delay: float = 0.05,
+    factor: float = 2.0,
+    retry_on: Tuple[Type[BaseException], ...] = (OSError,),
+    sleep: Callable[[float], None] = time.sleep,
+):
+    """Call ``fn()``; on ``retry_on`` retry up to ``attempts`` times total,
+    sleeping ``base_delay * factor**i`` between tries. Returns ``fn()``'s
+    value; re-raises the final exception when every attempt failed.
+
+    ``sleep`` is injectable so tests (and latency-sensitive callers) can
+    observe / suppress the backoff schedule.
+    """
+    assert attempts >= 1, attempts
+    for i in range(attempts):
+        try:
+            return fn()
+        except retry_on:
+            if i == attempts - 1:
+                raise
+            sleep(base_delay * factor**i)

@@ -1,10 +1,30 @@
-"""Checkpoint round-trip: resumed training is bit-identical."""
+"""Checkpoint round-trip: resumed training is bit-identical.
+
+Plus the verified chain (DESIGN.md §13): atomic writes + CRC32 sidecars
+mean a torn or corrupted snapshot is *detected* and skipped, never
+restored — ``latest_verified_checkpoint`` always falls back to the
+newest intact snapshot bit-exactly.
+"""
+import json
+import os
+
+import pytest
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import load_state, save_state
-from repro.checkpoint.npz import latest_checkpoint
+from repro.checkpoint import (
+    CheckpointVerifyError,
+    checkpoint_step,
+    latest_verified_checkpoint,
+    load_state,
+    prune_checkpoints,
+    save_state,
+    verified_checkpoints,
+    verify_checkpoint,
+)
+from repro.checkpoint.npz import CRC_SUFFIX, latest_checkpoint
 from repro.configs.base import MAvgConfig
 from repro.core.meta import init_state, make_meta_step
 from repro.models.simple import mlp_init, mlp_loss
@@ -129,3 +149,131 @@ def test_async_topo_roundtrip(tmp_path):
         resumed, _ = step(resumed, _batches(i))
     for a, b in zip(jax.tree.leaves(live), jax.tree.leaves(resumed)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# verified chain: atomic saves, CRC sidecars, torn/corrupt detection
+# ---------------------------------------------------------------------------
+
+
+def _small_state(seed=0):
+    cfg = MAvgConfig(algorithm="mavg", num_learners=2, k_steps=2,
+                     learner_lr=0.1, momentum=0.6)
+    return init_state(mlp_init(jax.random.PRNGKey(seed), 8, 16, 4), cfg)
+
+
+def test_kill_mid_save_falls_back_bit_exact(tmp_path):
+    """A save that dies mid-write (simulated via ``fault='torn'``: half
+    the npz bytes at the final path, no sidecar) must not poison resume:
+    the newest torn snapshot is skipped and the previous verified one
+    restores bit-exactly."""
+    state = _small_state()
+    good = save_state(str(tmp_path), state, 1)
+    torn = save_state(str(tmp_path), state, 2, fault="torn")
+    # the unverified scan would pick the torn head; the verified one skips
+    assert latest_checkpoint(str(tmp_path)) == torn
+    assert latest_verified_checkpoint(str(tmp_path)) == good
+    with pytest.raises(CheckpointVerifyError, match="sidecar"):
+        verify_checkpoint(torn)
+    restored = load_state(good, jax.eval_shape(lambda: state))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_corrupt_save_caught_by_crc(tmp_path):
+    """Post-write corruption (``fault='corrupt'`` flips one byte after
+    the full atomic save landed) passes the size check but fails the
+    per-entry CRC32 — bit rot is detected, not restored."""
+    state = _small_state()
+    good = save_state(str(tmp_path), state, 1)
+    bad = save_state(str(tmp_path), state, 2, fault="corrupt")
+    with pytest.raises(CheckpointVerifyError):
+        verify_checkpoint(bad)
+    assert latest_verified_checkpoint(str(tmp_path)) == good
+
+
+def test_truncated_npz_detected(tmp_path):
+    """A complete save later truncated on disk (filesystem-level tear)
+    fails the sidecar's byte-size check."""
+    state = _small_state()
+    path = save_state(str(tmp_path), state, 1)
+    with open(path, "r+b") as f:
+        f.truncate(os.path.getsize(path) // 2)
+    with pytest.raises(CheckpointVerifyError, match="torn write"):
+        verify_checkpoint(path)
+    assert latest_verified_checkpoint(str(tmp_path)) is None
+
+
+def test_entry_set_mismatch_detected(tmp_path):
+    """A sidecar that disagrees with the npz's entry set (e.g. a sidecar
+    from a different config pasted next to the snapshot) is rejected."""
+    path = save_state(str(tmp_path), {"a": np.arange(4.0),
+                                      "b": np.ones((2, 2))}, 1)
+    with open(path + CRC_SUFFIX) as f:
+        sidecar = json.load(f)
+    del sidecar["entries"]["['b']" if "['b']" in sidecar["entries"]
+                           else list(sidecar["entries"])[-1]]
+    with open(path + CRC_SUFFIX, "w") as f:
+        json.dump(sidecar, f)
+    with pytest.raises(CheckpointVerifyError, match="entry set mismatch"):
+        verify_checkpoint(path)
+
+
+def test_nonfinite_snapshot_not_a_rollback_target(tmp_path):
+    """``check_finite`` (the default) refuses a snapshot of a poisoned
+    state — NaN never re-enters MetaState via resume."""
+    save_state(str(tmp_path), {"a": np.array([1.0, np.nan])}, 1)
+    assert latest_verified_checkpoint(str(tmp_path)) is None
+    # integrity-only verification still accepts it (forensics use)
+    assert latest_verified_checkpoint(
+        str(tmp_path), check_finite=False
+    ) is not None
+
+
+def test_torn_sidecar_tolerated(tmp_path):
+    """A sidecar torn mid-write (invalid JSON) marks the snapshot
+    unverified instead of crashing the rollback scan."""
+    state = _small_state()
+    good = save_state(str(tmp_path), state, 1)
+    newer = save_state(str(tmp_path), state, 2)
+    with open(newer + CRC_SUFFIX, "w") as f:
+        f.write('{"npz_bytes": 12')  # truncated JSON
+    with pytest.raises(CheckpointVerifyError, match="torn sidecar"):
+        verify_checkpoint(newer)
+    assert latest_verified_checkpoint(str(tmp_path)) == good
+
+
+def test_retention_keeps_last_n_verified(tmp_path):
+    """``keep=N`` prunes everything older than the N newest verified
+    snapshots — torn leftovers older than the cutoff go too, and the
+    survivors are exactly the rollback chain."""
+    state = _small_state()
+    save_state(str(tmp_path), state, 1)
+    save_state(str(tmp_path), state, 2, fault="torn")
+    for s in (3, 4, 5):
+        save_state(str(tmp_path), state, s, keep=2)
+    snaps = sorted(f for f in os.listdir(str(tmp_path))
+                   if f.endswith(".npz"))
+    assert snaps == ["step_00000004.npz", "step_00000005.npz"]
+    assert all(os.path.exists(os.path.join(str(tmp_path), f + CRC_SUFFIX))
+               for f in snaps)
+
+
+def test_verified_chain_before_step(tmp_path):
+    """``verified_checkpoints(before_step=s)`` is the Supervisor's causal
+    filter: snapshots at or after the fault step (e.g. the emergency halt
+    snapshot, which can verify finite yet carry a diverged state) are
+    never rollback targets."""
+    state = _small_state()
+    p2 = save_state(str(tmp_path), state, 2)
+    p4 = save_state(str(tmp_path), state, 4)
+    p5 = save_state(str(tmp_path), state, 5)  # "emergency halt" snapshot
+    assert [checkpoint_step(p) for p in (p2, p4, p5)] == [2, 4, 5]
+    assert verified_checkpoints(str(tmp_path)) == [p2, p4, p5]
+    assert verified_checkpoints(str(tmp_path), before_step=5) == [p2, p4]
+    assert verified_checkpoints(str(tmp_path), before_step=2) == []
+
+
+def test_prune_requires_positive_keep(tmp_path):
+    with pytest.raises(AssertionError):
+        prune_checkpoints(str(tmp_path), 0)

@@ -23,7 +23,13 @@ The stream contract (DESIGN.md §11, src/repro/obs/sink.py):
 * ``meta_step`` is strictly increasing across the whole file, including
   across resume manifests (one run log = one monotone trajectory);
   alert/attribution records sit outside the trajectory (an alert repeats
-  the step it fired on) and are field-checked but not ordered.
+  the step it fired on) and are field-checked but not ordered;
+* ``fault`` / ``recovery`` records (core/supervisor.py, schema v3) mark
+  supervised auto-recovery transitions. A ``recovery`` record RESETS the
+  monotonicity tracker: it documents a legitimate rollback of the
+  trajectory to a verified checkpoint, after which meta_step restarts
+  from the resume point. A rewind WITHOUT a recovery record is still a
+  violation.
 
 Exit status 0 = valid; non-zero prints one line per violation.
 """
@@ -42,7 +48,8 @@ DEFAULT_SCHEMA = os.path.join(
     os.path.dirname(os.path.abspath(__file__)), "telemetry_schema.json"
 )
 
-KINDS = ("manifest", "step", "row", "alert", "attribution")
+KINDS = ("manifest", "step", "row", "alert", "attribution", "fault",
+         "recovery")
 
 
 def load_schema(path: str) -> dict:
@@ -74,6 +81,8 @@ def check_stream(lines, schema, *, name: str = "<stream>") -> list[str]:
     man_trainer = set(schema["manifest_required_trainer"])
     alert_req = set(schema.get("alert_required", ()))
     attr_req = set(schema.get("attribution_required", ()))
+    fault_req = set(schema.get("fault_required", ()))
+    recovery_req = set(schema.get("recovery_required", ()))
     known_majors = {
         _major(v) for v in schema.get(
             "known_versions", [schema["schema_version"]]
@@ -163,6 +172,23 @@ def check_stream(lines, schema, *, name: str = "<stream>") -> list[str]:
                 errs.append(
                     f"{where}: attribution missing fields {sorted(missing)}"
                 )
+        elif kind == "fault":
+            if n_manifests == 0:
+                errs.append(f"{where}: fault record before any manifest")
+            missing = fault_req - set(rec)
+            if missing:
+                errs.append(f"{where}: fault missing fields {sorted(missing)}")
+        elif kind == "recovery":
+            if n_manifests == 0:
+                errs.append(f"{where}: recovery record before any manifest")
+            missing = recovery_req - set(rec)
+            if missing:
+                errs.append(
+                    f"{where}: recovery missing fields {sorted(missing)}"
+                )
+            # the supervisor rolled the run back to a verified snapshot:
+            # the trajectory legitimately rewinds here
+            last_step = None
         # kind == "row": bench rows are suite-specific, not field-checked
     if n_manifests == 0:
         errs.append(f"{name}: no manifest record in stream")
