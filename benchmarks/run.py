@@ -10,6 +10,7 @@
   L  elastic_bench.py    elastic membership / hetero-K / time-varying gossip
   A  async_bench.py      async bounded-staleness server vs the barrier
   X  chaos_bench.py      fault injection + supervised recovery (repro.chaos)
+  B  robust_bench.py     Byzantine-tolerant aggregation accept (repro.robust)
   P  pack_bench.py      packed flat meta-plane parity / launches (repro.pack)
   R  roofline_table.py  section Dry-run / Roofline aggregation
 
@@ -37,7 +38,7 @@ def main() -> None:
                     help="explicit form of the default (smoke-sized "
                          "suites); mutually exclusive with --full")
     ap.add_argument("--only", nargs="*", default=None,
-                    help="subset: convergence mu_p k baselines kernel comm topology elastic async chaos pack roofline")
+                    help="subset: convergence mu_p k baselines kernel comm topology elastic async chaos robust pack roofline")
     ap.add_argument("--bench-dir", default="bench_out",
                     help="directory of the BENCH_<suite>.json trajectory "
                          "stores ('' = don't append)")
@@ -58,6 +59,7 @@ def main() -> None:
         mu_p_sweep,
         elastic_bench,
         pack_bench,
+        robust_bench,
         roofline_table,
         topology_bench,
     )
@@ -69,6 +71,7 @@ def main() -> None:
         "elastic": lambda: elastic_bench.main(quick=quick),
         "async": lambda: async_bench.main(quick=quick),
         "chaos": lambda: chaos_bench.main(quick=quick),
+        "robust": lambda: robust_bench.main(quick=quick),
         "pack": lambda: pack_bench.main(quick=quick),
         "convergence": lambda: convergence.main(quick=quick),
         "baselines": lambda: baselines.main(quick=quick),

@@ -52,13 +52,20 @@ FAULT_KINDS = (
     "straggle",
     "torn_save",
     "corrupt_save",
+    "finite_scale",
+    "finite_bitflip",
 )
 
 # kinds that target a specific learner (the rest target the run)
 LEARNER_KINDS = (
     "nan_batch", "inf_batch", "payload_bitflip", "payload_scale",
-    "crash", "straggle",
+    "crash", "straggle", "finite_scale", "finite_bitflip",
 )
+
+# the largest |magnitude| a finite_scale fault may carry: scaled f32
+# payloads of magnitude up to ~2^87 stay strictly below the f32 max
+# (2^40 * 2^87 < 2^128), so the corrupted plane is finite BY CONSTRUCTION
+FINITE_SCALE_MAX = 2.0 ** 40
 
 
 @dataclass(frozen=True)
@@ -96,6 +103,23 @@ class FaultSpec:
             assert self.learner == -1, (
                 f"{self.kind} targets the run's save path, not a learner"
             )
+        if self.kind == "finite_scale":
+            # the finiteness guarantee is by construction, not hope: the
+            # multiplier itself must be finite and bounded away from the
+            # f32 overflow region (see FINITE_SCALE_MAX)
+            import math
+
+            assert math.isfinite(self.magnitude), self.magnitude
+            assert 0 < abs(self.magnitude) <= FINITE_SCALE_MAX, (
+                f"finite_scale magnitude {self.magnitude} outside "
+                f"(0, {FINITE_SCALE_MAX}]"
+            )
+        if self.kind == "finite_bitflip":
+            # mask the exponent-top bit: flipping bit 30 (f32) / 14 (bf16)
+            # of a normal value lands in the inf/NaN exponent range, which
+            # is exactly what the finite guard WOULD catch. Bits <= 29
+            # produce huge-but-finite corruption the guard cannot see.
+            object.__setattr__(self, "bit", min(self.bit, 29))
 
 
 @dataclass(frozen=True)

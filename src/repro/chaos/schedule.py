@@ -81,9 +81,12 @@ class FaultSchedule:
             self.nan[f.step: f.step + f.duration, j] = 1.0
         elif f.kind == "inf_batch":
             self.inf[f.step: f.step + f.duration, j] = 1.0
-        elif f.kind == "payload_scale":
+        elif f.kind in ("payload_scale", "finite_scale"):
+            # finite_scale rides the same compiled array: the finiteness
+            # guarantee lives in FaultSpec validation (bounded finite
+            # magnitude), not in a separate injection path
             self.scale[f.step: f.step + f.duration, j] = f.magnitude
-        elif f.kind == "payload_bitflip":
+        elif f.kind in ("payload_bitflip", "finite_bitflip"):
             word = np.int32(np.uint32(1 << f.bit).view(np.int32))
             self.xor[f.step: f.step + f.duration, j] = word
             rng = np.random.RandomState(

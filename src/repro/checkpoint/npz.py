@@ -188,27 +188,47 @@ def _sidecar_ok(path: str) -> bool:
 def prune_checkpoints(directory: str, keep: int) -> list[str]:
     """Delete snapshots older than the ``keep`` newest sidecar-complete
     ones (their sidecars too, and any older torn/unverified leftovers —
-    useless for rollback). Returns the removed npz paths."""
+    useless for rollback). Returns the removed npz paths.
+
+    Removal order is sidecar FIRST, npz second: if the pair's deletion is
+    interrupted between the two unlinks, what survives is an npz with no
+    sidecar — indistinguishable from a torn save, skipped by rollback and
+    swept by the next prune. The opposite order would strand an orphaned
+    ``.crc32.json`` that nothing ever lists (retention iterates the npz
+    files); any such pre-existing orphans are swept here too.
+    """
     assert keep >= 1, keep
     if not os.path.isdir(directory):
         return []
+    names = os.listdir(directory)
     snaps = sorted(
-        f for f in os.listdir(directory)
+        f for f in names
         if f.endswith(".npz") and not f.endswith(".npz.tmp")
     )
+    removed = []
+    # sweep sidecars whose snapshot is already gone (stranded by an
+    # interrupted delete under the old npz-first order, or by an external
+    # partial cleanup) — harmless to rollback but they accumulate forever
+    for f in names:
+        if not f.endswith(CRC_SUFFIX):
+            continue
+        if f[: -len(CRC_SUFFIX)] not in snaps:
+            try:
+                os.remove(os.path.join(directory, f))
+            except OSError:
+                pass
     verified = [f for f in snaps if _sidecar_ok(os.path.join(directory, f))]
     if len(verified) <= keep:
         return []
     cutoff = verified[-keep]
-    removed = []
     for f in snaps:
         if f >= cutoff:
             continue
         p = os.path.join(directory, f)
         try:
-            os.remove(p)
             if os.path.exists(p + CRC_SUFFIX):
                 os.remove(p + CRC_SUFFIX)
+            os.remove(p)
             removed.append(p)
         except OSError:
             pass  # retention is best-effort; verify guards correctness

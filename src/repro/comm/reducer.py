@@ -53,6 +53,11 @@ class Reducer:
     """Base: reduce the learner stack to one averaged parameter tree."""
 
     name = "reducer"
+    # robust aggregation hook (repro.robust, DESIGN.md §14): a callable
+    # replacing the trusting learner-stack mean (trimmed mean / median
+    # over the L axis). None — the default, and the only value when
+    # MAvgConfig.robust is off — keeps the exact mean code path.
+    aggregate = None
 
     def init_residual(self, gp, num_learners: int):
         """Error-feedback state for MetaState.comm_residual (None = off)."""
@@ -71,7 +76,10 @@ class DenseReducer(Reducer):
         self.meta_dtype = meta_dtype
 
     def reduce(self, learners, gp, residual, *, step):
-        avg = tree_cast(tree_mean_axis0(learners), self.meta_dtype)
+        if self.aggregate is not None:
+            avg = tree_cast(self.aggregate(learners), self.meta_dtype)
+        else:
+            avg = tree_cast(tree_mean_axis0(learners), self.meta_dtype)
         b = dense_bytes(learners)
         metrics = {
             "comm_bytes": b,
@@ -113,10 +121,13 @@ class CompressedReducer(Reducer):
         c, wire = self._compress(delta, step)
         err = tree_sub(delta, c)  # quantization error: EF residual + metric
         new_residual = err if residual is not None else None
-        avg = jax.tree.map(
-            lambda g, ci: (g.astype(jnp.float32) + jnp.mean(ci, axis=0)),
-            gp, c,
-        )
+        if self.aggregate is not None:
+            avg = tree_add(tree_cast(gp, jnp.float32), self.aggregate(c))
+        else:
+            avg = jax.tree.map(
+                lambda g, ci: (g.astype(jnp.float32) + jnp.mean(ci, axis=0)),
+                gp, c,
+            )
         db = dense_bytes(learners)
         metrics = {
             "comm_bytes": wire,
@@ -159,20 +170,26 @@ class ErrorFeedback(Reducer):
         return self.inner.reduce(learners, gp, residual, step=step)
 
 
-def make_reducer(cfg) -> Reducer:
+def make_reducer(cfg, aggregate=None) -> Reducer:
     """Build the reducer described by ``cfg.comm`` (an MAvgConfig)."""
-    return make_reducer_for(cfg.comm, meta_dtype=cfg.meta_dtype)
+    return make_reducer_for(cfg.comm, meta_dtype=cfg.meta_dtype,
+                            aggregate=aggregate)
 
 
-def make_reducer_for(c, meta_dtype: str = "float32") -> Reducer:
+def make_reducer_for(c, meta_dtype: str = "float32",
+                     aggregate=None) -> Reducer:
     """Build a reducer from a bare ``CommConfig`` — the topology subsystem
     instantiates one per edge class (intra-group / cross-group / gossip
-    neighbor), each with its own scheme."""
+    neighbor), each with its own scheme. ``aggregate`` installs the
+    robust aggregation hook (repro.robust) on the underlying reducer."""
     from repro.comm.quant import QuantReducer
     from repro.comm.topk import TopKReducer
 
     if c.scheme == "dense":
-        return DenseReducer(meta_dtype=meta_dtype)
+        r = DenseReducer(meta_dtype=meta_dtype)
+        if aggregate is not None:
+            r.aggregate = aggregate
+        return r
     if c.scheme in ("int8", "fp8"):
         r = QuantReducer(dtype=c.scheme, chunk_rows=c.chunk_rows,
                          use_pallas=c.use_pallas, seed=c.seed)
@@ -184,6 +201,8 @@ def make_reducer_for(c, meta_dtype: str = "float32") -> Reducer:
                         seed=c.seed)
     else:
         raise ValueError(f"unknown comm scheme {c.scheme!r}")
+    if aggregate is not None:
+        r.aggregate = aggregate
     if c.error_feedback:
         return ErrorFeedback(r)
     return r

@@ -301,6 +301,78 @@ class ElasticConfig:
 
 ASYNC_UPDATES = ("mavg", "elastic")
 
+# robust aggregation estimators over the learner stack (repro.robust,
+# DESIGN.md §14) — the single source the CLI choices derive from.
+# 'mean' keeps the plain average (clipping/scoring may still be on).
+ROBUST_ESTIMATORS = ("mean", "trimmed", "median")
+
+
+@dataclass(frozen=True)
+class RobustConfig:
+    """Byzantine-tolerant meta aggregation (``repro.robust``, DESIGN.md §14).
+
+    The paper's block-momentum update trusts the plain mean over learner
+    displacements; one learner shipping finite-but-corrupt payloads
+    poisons the global momentum for everyone. These knobs bound each
+    learner's influence on the consensus instead of trusting it.
+    ``MAvgConfig.robust=None`` (the default) leaves every code path
+    untouched — bitwise-identical to a build without the subsystem.
+
+    estimator        mean | trimmed | median — the aggregation rule that
+                     replaces the learner-stack mean inside mean-based
+                     reducers (flat all-reduce, hierarchical inner+outer).
+                     'trimmed' drops the ``trim`` largest and smallest
+                     values per coordinate; 'median' is the maximal trim.
+                     Gossip/async have weighted partial means instead of
+                     an L-way mean, so there the influence bound is the
+                     norm clip (below) — the estimator is ignored.
+    trim             coordinates trimmed per side (estimator='trimmed');
+                     trim=0 is bitwise the plain mean (pinned in tests)
+    clip_mult        per-learner displacement norm clip: each learner's
+                     displacement is scaled down to at most
+                     ``clip_mult x median(trailing clip_window per-step
+                     median norms)``. 0.0 = clipping off. Clipped-away
+                     mass is REJECTED — it never enters the error-
+                     feedback residual (not deferred to later rounds).
+    clip_window      trailing-median ring length (meta steps); no
+                     clipping until the ring has filled once (warmup)
+    score            compute Krum-style per-learner anomaly scores each
+                     mix (nearest-neighbor distance sums from the
+                     learner-stack Gram matrix) and stream them through
+                     repro.obs as ``robust`` records (schema v4)
+    score_neighbors  neighbors summed per score; 0 = auto (L - 2)
+    quarantine_after M consecutive anomalous flush windows before the
+                     Trainer quarantines a learner inline through the
+                     elastic membership mask — no HealthHalt round-trip,
+                     no rollback. 0 = inline quarantine off. Requires a
+                     membership-capable topology (hierarchical/gossip/
+                     async).
+    score_ratio      a learner is anomalous in a window when its mean
+                     score exceeds ``score_ratio x`` the median of its
+                     peers' scores
+    """
+
+    estimator: str = "trimmed"
+    trim: int = 1
+    clip_mult: float = 0.0
+    clip_window: int = 8
+    score: bool = True
+    score_neighbors: int = 0
+    quarantine_after: int = 0
+    score_ratio: float = 4.0
+
+    def __post_init__(self):
+        assert self.estimator in ROBUST_ESTIMATORS, (
+            f"unknown robust estimator {self.estimator!r}; choose from "
+            f"{ROBUST_ESTIMATORS}"
+        )
+        assert self.trim >= 0, self.trim
+        assert self.clip_mult >= 0.0, self.clip_mult
+        assert self.clip_window >= 1, self.clip_window
+        assert self.score_neighbors >= 0, self.score_neighbors
+        assert self.quarantine_after >= 0, self.quarantine_after
+        assert self.score_ratio > 1.0, self.score_ratio
+
 
 @dataclass(frozen=True)
 class AsyncConfig:
@@ -501,6 +573,9 @@ class MAvgConfig:
     comm: CommConfig = field(default_factory=CommConfig)
     # meta-level mixing topology (repro.topology); flat = all-reduce
     topology: TopologyConfig = field(default_factory=TopologyConfig)
+    # Byzantine-tolerant meta aggregation (repro.robust, DESIGN.md §14);
+    # None = off — every existing code path is bitwise untouched
+    robust: Optional[RobustConfig] = None
 
     def __post_init__(self):
         if self.comm.scheme != "dense" and self.algorithm not in AVERAGING_ALGOS:
@@ -540,6 +615,28 @@ class MAvgConfig:
                 f"heterogeneous schedule masks steps *within* the static "
                 f"K-step scan, so every K_g must be <= k_steps"
             )
+        if self.robust is not None:
+            r = self.robust
+            if r.estimator == "trimmed" and r.trim > 0:
+                # the smallest L-way mean the trimmed estimator replaces:
+                # within-group size for hierarchical, L for flat
+                width = (
+                    self.num_learners // t.groups
+                    if t.kind == "hierarchical" else self.num_learners
+                )
+                if 2 * r.trim >= width:
+                    raise ValueError(
+                        f"robust trim={r.trim} removes 2*trim={2 * r.trim} "
+                        f"of {width} values per coordinate — the trimmed "
+                        f"mean needs 2*trim < the aggregation width"
+                    )
+            if r.quarantine_after > 0 and t.kind == "flat":
+                raise ValueError(
+                    "robust inline quarantine masks learners through the "
+                    "elastic membership schedule; the flat topology has no "
+                    "membership rows — use hierarchical/gossip/async, or "
+                    "set quarantine_after=0"
+                )
 
 
 # sink kinds of the repro.obs subsystem (DESIGN.md §11) — the single

@@ -142,6 +142,13 @@ def init_state(params, cfg: MAvgConfig, reducer=None,
 
         topology = make_topology(cfg, reducer)
     comm_residual, topo = topology.init_buffers(gp, cfg)
+    if cfg.robust is not None and cfg.robust.clip_mult > 0.0:
+        # the norm clip's trailing-median budget ring (repro.robust,
+        # DESIGN.md §14) rides in MetaState.topo regardless of topology —
+        # merged here so the layout changes only when the feature is on
+        from repro.robust import robust_ring_buffers
+
+        topo = {**(topo or {}), **robust_ring_buffers(cfg.robust)}
     return MetaState(
         global_params=gp,
         momentum=tree_zeros_like(gp),

@@ -59,6 +59,11 @@ class RecoveryPolicy:
     quarantine_steps   probation window (meta steps) a suspect learner is
                        masked out of membership after rollback; 0 = never
                        quarantine
+    readmit_clean_windows  quarantine hysteresis: the learner must sit
+                       out M consecutive clean probation windows before
+                       readmission — the total mask spans
+                       ``quarantine_steps * M`` steps. 1 (the default)
+                       is the single-window behavior, bit-for-bit.
     resalt_data        bump TrainConfig.data_salt per retry (redraw the
                        replayed batches; transient chaos faults drop out)
     """
@@ -67,6 +72,7 @@ class RecoveryPolicy:
     lr_backoff: float = 0.5
     momentum_backoff: float = 1.0
     quarantine_steps: int = 0
+    readmit_clean_windows: int = 1
     resalt_data: bool = True
 
     def __post_init__(self):
@@ -74,6 +80,7 @@ class RecoveryPolicy:
         assert 0.0 < self.lr_backoff <= 1.0, self.lr_backoff
         assert 0.0 < self.momentum_backoff <= 1.0, self.momentum_backoff
         assert self.quarantine_steps >= 0, self.quarantine_steps
+        assert self.readmit_clean_windows >= 1, self.readmit_clean_windows
 
 
 @dataclass(frozen=True)
@@ -160,11 +167,14 @@ class Supervisor:
         return sched.suspect(fault_step) if sched is not None else None
 
     def _quarantine(self, trainer, learners, start: int) -> None:
-        """Mask ``learners`` out of membership for the probation window
-        ``[start, start + quarantine_steps)``, keeping every row at least
-        one learner strong; rows after the window are untouched, so the
-        learner is readmitted automatically. Skipped (with a note in the
-        recovery record) on runs without a membership schedule."""
+        """Mask ``learners`` out of membership for the probation span
+        ``[start, start + quarantine_steps * readmit_clean_windows)``,
+        keeping every row at least one learner strong; rows after the
+        span are untouched, so the learner is readmitted automatically
+        only after sitting out M consecutive clean windows (hysteresis —
+        a marginal learner doesn't flap in and out every window). Skipped
+        (with a note in the recovery record) on runs without a membership
+        schedule."""
         import numpy as np
 
         topo = trainer.state.topo
@@ -172,7 +182,8 @@ class Supervisor:
             return
         m = np.array(np.asarray(topo["membership"]), np.float32)
         T = m.shape[0]
-        for s in range(start, start + self.policy.quarantine_steps):
+        span = self.policy.quarantine_steps * self.policy.readmit_clean_windows
+        for s in range(start, start + span):
             row = m[s % T].copy()
             row[list(learners)] = 0.0
             if row.sum() >= 1.0:  # never quarantine the last learner

@@ -130,6 +130,13 @@ class Trainer:
             if self.obs_cfg.health else None
         )
         self.attribution: list[dict] = []
+        # inline quarantine (repro.robust, DESIGN.md §14): host-side
+        # streak counter over the flushed per-learner anomaly scores —
+        # a persistently-anomalous learner is masked out of membership
+        # right here, without a HealthHalt/supervisor round-trip
+        self.robust_records: list[dict] = []
+        self.quarantined: dict[int, int] = {}  # learner -> quarantine step
+        self._anomaly_streak = None
 
     # ------------------------------------------------------------------
     # telemetry assembly (lazy, once per Trainer)
@@ -262,6 +269,7 @@ class Trainer:
             dt = max(now - self._last_flush_t, 1e-9)
             self._last_flush_t = now
             msps = len(recs) / dt
+            robust_rows = self._extract_robust(recs)
             for r in recs:
                 s = r["meta_step"]
                 r["samples"] = (
@@ -271,6 +279,7 @@ class Trainer:
                 r["samples_per_sec"] = msps * samples_per_meta
                 r["elapsed_s"] = now - run_t0
                 self.history.append(r)
+            self._observe_robust(robust_rows)
             alerts = (
                 self._monitor.observe(recs) if self._monitor is not None
                 else ()
@@ -279,6 +288,8 @@ class Trainer:
                 with self.tracer.span("obs.sink_append"):
                     for r in recs:
                         self._sink.append(r)
+                    for rb in robust_rows:
+                        self._sink.append(rb)
                     for a in alerts:
                         self._sink.append(a)
                     self._sink.flush()
@@ -373,6 +384,83 @@ class Trainer:
                 if self._sink is not None:
                     self._sink.flush()
         return self.history
+
+    # ------------------------------------------------------------------
+    # robust telemetry + inline quarantine (repro.robust, DESIGN.md §14)
+    # ------------------------------------------------------------------
+
+    def _extract_robust(self, recs):
+        """Pop the ``robust_*`` metric scalars out of the flushed step
+        records and repackage them as ``robust`` records (telemetry
+        schema v4) — one per meta step that carried them. Step rows stay
+        on the v3 step schema; the robust rows ride the same sink."""
+        from repro.robust import ROBUST_METRIC_PREFIX as P
+
+        rows = []
+        for r in recs:
+            if not any(k.startswith(P) for k in r):
+                continue
+            rb = {
+                "kind": "robust",
+                "meta_step": r["meta_step"],
+                "clipped_learners": r.pop(P + "clipped_learners", 0.0),
+                "clip_budget": r.pop(P + "clip_budget", 0.0),
+                "anomaly_score": r.pop(P + "anomaly_score", 0.0),
+                "trim_fraction": r.pop(P + "trim_fraction", 0.0),
+            }
+            scores = []
+            while f"{P}score_{len(scores)}" in r:
+                scores.append(r.pop(f"{P}score_{len(scores)}"))
+            if scores:
+                rb["scores"] = scores
+            for k in [k for k in r if k.startswith(P)]:
+                r.pop(k)
+            rows.append(rb)
+        self.robust_records.extend(rows)
+        return rows
+
+    def _observe_robust(self, rows):
+        """The inline quarantine controller: a learner whose windowed
+        mean anomaly score exceeds ``score_ratio`` x the peer median for
+        ``quarantine_after`` consecutive flush windows is masked out of
+        the membership schedule on the spot — graceful degradation with
+        no HealthHalt round-trip and no rollback (the robust mix already
+        bounded its influence; quarantine just stops paying its wire and
+        compute). Needs a membership-capable run (an elastic schedule or
+        chaos crash faults) — quietly inert otherwise."""
+        import numpy as np
+
+        rcfg = self.mcfg.robust
+        if rcfg is None or rcfg.quarantine_after <= 0:
+            return
+        sc = [row["scores"] for row in rows if "scores" in row]
+        if not sc:
+            return
+        mean = np.asarray(sc, np.float64).mean(axis=0)  # (L,)
+        med = float(np.median(mean))
+        anomalous = mean > rcfg.score_ratio * max(med, 1e-30)
+        if self._anomaly_streak is None:
+            self._anomaly_streak = np.zeros(mean.shape[0], np.int64)
+        self._anomaly_streak = np.where(
+            anomalous, self._anomaly_streak + 1, 0
+        )
+        hit = [
+            j for j in range(mean.shape[0])
+            if self._anomaly_streak[j] >= rcfg.quarantine_after
+            and j not in self.quarantined
+        ]
+        topo = self.state.topo
+        if not hit or not (isinstance(topo, dict) and "membership" in topo):
+            return
+        m = np.asarray(topo["membership"], np.float32).copy()
+        m[:, hit] = 0.0
+        if (m.sum(axis=1) < 1.0).any():
+            return  # never quarantine away the last present learner(s)
+        step = int(rows[-1]["meta_step"])
+        self.set_membership(m)
+        for j in hit:
+            self.quarantined[j] = step
+        rows[-1]["quarantined"] = sorted(self.quarantined)
 
     def restore(self, path):
         self.state = load_state(path, self.state)

@@ -20,6 +20,7 @@ from repro.kernels import neighbor_mix as _nm
 from repro.kernels import pack_update as _pu
 from repro.kernels import quantize as _q
 from repro.kernels import ref as _ref
+from repro.kernels import robust_reduce as _rr
 
 LANES = 128
 
@@ -269,6 +270,43 @@ def pack_compress(d, u, *, qmax=127, block=None, with_err=True,
         return _pu.pack_compress_3d(d, u, qmax=qmax, block=b,
                                     with_err=with_err, interpret=interpret)
     return _ref.pack_compress_ref(d, u, qmax, b, with_err=with_err)
+
+
+# ---------------------------------------------------------------------------
+# robust learner-stack reduction (repro.robust)
+# ---------------------------------------------------------------------------
+
+
+median_trim = _rr.median_trim
+
+
+def robust_reduce(x, *, trim=0, block=None, use_pallas=True, interpret=None):
+    """Coordinate-wise trimmed mean over the leading (learner) axis of a
+    stacked plane: drop the ``trim`` largest and smallest values per
+    coordinate, average the rest. ``trim=0`` is bitwise the plain mean
+    (the parity contract every existing invariant rides on);
+    ``trim=median_trim(L)`` is the coordinate-wise median.
+
+    Packed (L, rows, 128) stacks route through the fused Pallas kernel
+    (one HBM pass, the sort stays in VMEM); everything else takes the jnp
+    oracle, which is also the per-leaf path for unpacked pytrees.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    if (use_pallas and x.ndim == 3 and x.shape[2] == LANES
+            and x.shape[1] % 8 == 0):
+        b = _q.choose_block(x.shape[1], block)
+        return _rr.robust_reduce_3d(x, trim=trim, block=b,
+                                    interpret=interpret)
+    return _ref.robust_reduce_ref(x, trim)
+
+
+def robust_reduce_tree(tree, *, trim=0, use_pallas=True, interpret=None):
+    """Apply the robust reduction leaf-wise over a stacked (L, ...) pytree."""
+    return jax.tree.map(
+        lambda x: robust_reduce(x, trim=trim, use_pallas=use_pallas,
+                                interpret=interpret),
+        tree,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -112,6 +112,22 @@ def pack_compress_ref(d, u, qmax: int, block: int, with_err: bool = True):
     return c, (d - c if with_err else None), scales
 
 
+def robust_reduce_ref(x, trim: int = 0):
+    """Oracle of robust_reduce.robust_reduce_3d on any (L, ...) learner
+    stack: coordinate-wise trimmed mean over axis 0, f32 math.
+
+    ``trim=0`` is sum/L in jnp.mean's reduction order (the bitwise mean-
+    parity contract); ``trim = (L-1)//2`` is the coordinate-wise median.
+    """
+    L = x.shape[0]
+    assert 0 <= 2 * trim < L, (trim, L)
+    x32 = x.astype(jnp.float32)
+    if trim == 0:
+        return jnp.sum(x32, axis=0) / L
+    s = jnp.sort(x32, axis=0)
+    return jnp.sum(s[trim:L - trim], axis=0) / (L - 2 * trim)
+
+
 def neighbor_mix_ref(x, w):
     """Oracle of neighbor_mix.neighbor_mix_3d on an unflattened learner
     stack: x (L, ...), w (L, L) -> sum_k w_jk x_k, f32 math."""

@@ -28,9 +28,11 @@ from repro.configs.base import (
     TOPOLOGIES,
     AsyncConfig,
     CommConfig,
+    ROBUST_ESTIMATORS,
     ElasticConfig,
     MAvgConfig,
     ObsConfig,
+    RobustConfig,
     TopologyConfig,
     TrainConfig,
     get_config,
@@ -154,6 +156,29 @@ def main() -> None:
                     help="comma subset of the standard fault kinds "
                          "(crash,nan,payload,straggle,torn_save); "
                          "default all")
+    ap.add_argument("--robust", default=None, choices=ROBUST_ESTIMATORS,
+                    help="robust meta aggregation (repro.robust): replace "
+                         "the learner-stack mean with a coordinate-wise "
+                         "trimmed mean or median ('mean' keeps the plain "
+                         "mean but still enables clip/score below)")
+    ap.add_argument("--robust-trim", type=int, default=1,
+                    help="learners trimmed from EACH end per coordinate "
+                         "(trimmed estimator)")
+    ap.add_argument("--robust-clip", type=float, default=0.0,
+                    help="per-learner displacement norm clip at this "
+                         "multiple of the trailing-median budget "
+                         "(0 = no clipping)")
+    ap.add_argument("--robust-clip-window", type=int, default=8,
+                    help="trailing-median ring length (meta steps) the "
+                         "clip budget is computed over")
+    ap.add_argument("--robust-no-score", action="store_true",
+                    help="disable per-learner anomaly scoring (on by "
+                         "default when --robust is set)")
+    ap.add_argument("--robust-quarantine-after", type=int, default=0,
+                    help="inline quarantine: mask a learner out of "
+                         "membership after this many consecutive "
+                         "anomalous flush windows (0 = never; needs a "
+                         "membership-capable topology)")
     ap.add_argument("--finite-guard", action="store_true",
                     help="in-step NaN/Inf barrier: poisoned learner "
                          "planes are reset to the broadcast global "
@@ -171,6 +196,10 @@ def main() -> None:
                     help="probation window (meta steps) a suspect "
                          "learner is quarantined from membership after "
                          "rollback (0 = never)")
+    ap.add_argument("--supervise-readmit", type=int, default=1,
+                    help="quarantine hysteresis: clean probation windows "
+                         "a quarantined learner must sit out before "
+                         "readmission (total mask = window * this)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -226,12 +255,24 @@ def main() -> None:
         raise SystemExit("--supervise needs --checkpoint-dir (the "
                          "verified rollback chain lives there)")
 
+    robust = (
+        RobustConfig(
+            estimator=args.robust, trim=args.robust_trim,
+            clip_mult=args.robust_clip,
+            clip_window=args.robust_clip_window,
+            score=not args.robust_no_score,
+            quarantine_after=args.robust_quarantine_after,
+        )
+        if args.robust is not None else None
+    )
+
     def make_mcfg(momentum_scale: float = 1.0) -> MAvgConfig:
         return MAvgConfig(
             algorithm=args.algorithm, num_learners=args.learners,
             k_steps=args.k, learner_lr=args.lr,
             momentum=args.momentum * momentum_scale,
             finite_guard=args.finite_guard,
+            robust=robust,
             comm=CommConfig(scheme=args.comm, k_frac=args.comm_k_frac,
                             error_feedback=not args.no_error_feedback),
             topology=TopologyConfig(
@@ -286,6 +327,7 @@ def main() -> None:
             policy=RecoveryPolicy(
                 max_retries=args.supervise_retries,
                 quarantine_steps=args.supervise_quarantine,
+                readmit_clean_windows=args.supervise_readmit,
             ),
         )
         trainer, history = sup.run()

@@ -23,8 +23,11 @@ import jax
 # must reject them: tools/check_telemetry.py gates on the major);
 # 3 = PR 9 (adds the ``fault`` and ``recovery`` record kinds of
 # core/supervisor.py plus the optional ``nonfinite_learners`` step
-# metric — additive again, same major-gating story)
-SCHEMA_VERSION = 3
+# metric — additive again, same major-gating story);
+# 4 = adds the ``robust`` record kind (repro.robust: per-mix clip /
+# trim / anomaly-score telemetry repackaged out of the step rows by
+# core/trainer.py) — additive
+SCHEMA_VERSION = 4
 
 
 def packspec_hash(spec) -> str | None:

@@ -1,0 +1,19 @@
+# Byzantine-tolerant meta aggregation (DESIGN.md §14): robust estimators
+# over the learner stack, per-learner norm clipping to a trailing-median
+# displacement budget, and Krum-style anomaly scores streamed through
+# repro.obs. MAvgConfig.robust=None leaves every code path untouched.
+from repro.robust.aggregator import (
+    ROBUST_METRIC_PREFIX,
+    RobustAggregator,
+    anomaly_scores,
+    make_robust,
+    robust_ring_buffers,
+)
+
+__all__ = [
+    "ROBUST_METRIC_PREFIX",
+    "RobustAggregator",
+    "anomaly_scores",
+    "make_robust",
+    "robust_ring_buffers",
+]

@@ -1,0 +1,232 @@
+"""Robust aggregation over the learner stack (DESIGN.md §14).
+
+The paper's meta update trusts the plain mean over learner displacements;
+one learner shipping finite-but-corrupt payloads (a mis-scaled plane, a
+bit-flip that misses NaN/Inf) silently poisons the global momentum for
+every learner — the in-step finite guard (§13) cannot see it, and the
+supervisor's only remedy is detect -> halt -> rollback, which discards
+healthy work. This module bounds each learner's influence on the
+consensus instead:
+
+* **Trimmed mean / median** (``aggregate``): coordinate-wise order
+  statistics over the L axis replace the learner-stack mean inside the
+  mean-based reducers (kernels/robust_reduce.py on the packed plane;
+  the jnp oracle per leaf elsewhere). ``trim=0`` is bitwise the plain
+  mean.
+* **Norm clipping** (``guard``): each learner's displacement is scaled
+  down to at most ``clip_mult x`` the median of a trailing ring of
+  per-step median displacement norms — a budget that tracks the run's
+  own scale, so a learner whose payload suddenly blows up is bounded
+  without tuning an absolute threshold. Clipped-away mass is REJECTED:
+  the clip happens before the wire compressor, so it never enters the
+  error-feedback residual and is never replayed into later rounds.
+* **Anomaly scores** (``anomaly_scores``): Krum-style nearest-neighbor
+  distance sums computed from the per-learner Gram matrix of the
+  displacement stack — one (L, L) matmul over the packed plane, no
+  pairwise plane materialization. Scores stream through repro.obs each
+  mix (schema v4 ``robust`` records) and feed the Trainer's inline
+  quarantine, so a persistently-anomalous learner is removed from
+  membership without a HealthHalt round-trip.
+
+The trailing-median ring rides in ``MetaState.topo`` (keys
+``robust_ring``/``robust_count``) only when clipping is on — the
+checkpoint layout changes only when the feature does.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MAvgConfig, RobustConfig
+from repro.kernels import ops as kops
+
+# every robust metric key the topologies emit starts with this; the
+# Trainer repackages them out of the step records into ``robust`` records
+ROBUST_METRIC_PREFIX = "robust_"
+
+_EPS = 1e-12
+
+
+def robust_ring_buffers(rcfg: RobustConfig) -> dict:
+    """The trailing-median clip state merged into ``MetaState.topo`` by
+    ``core.meta.init_state`` when clipping is on: a (clip_window,) ring of
+    per-step median displacement norms plus the write cursor. No clipping
+    fires until the ring has filled once (the warmup)."""
+    return {
+        "robust_ring": jnp.zeros((rcfg.clip_window,), jnp.float32),
+        "robust_count": jnp.zeros((), jnp.int32),
+    }
+
+
+def anomaly_scores(delta, *, neighbors: int = 0):
+    """Krum-style anomaly scores of an (L, ...) displacement stack.
+
+    Builds the (L, L) Gram matrix G from per-learner flattened chunks
+    (``||d_j - d_k||^2 = G_jj + G_kk - 2 G_jk`` — one matmul, no pairwise
+    plane), then scores each learner by the sum of its ``neighbors``
+    smallest non-self distances (0 = auto: L - 2). Large score = far from
+    every cluster of peers = anomalous.
+    """
+    flats = [
+        x.astype(jnp.float32).reshape(x.shape[0], -1)
+        for x in jax.tree.leaves(delta)
+    ]
+    L = flats[0].shape[0]
+    G = sum(f @ f.T for f in flats)  # (L, L)
+    sq = jnp.diagonal(G)
+    d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * G, 0.0)
+    d2 = d2 + jnp.where(jnp.eye(L, dtype=bool), jnp.inf, 0.0)
+    k = neighbors if neighbors > 0 else max(L - 2, 1)
+    k = min(k, L - 1)
+    return jnp.sum(jnp.sort(d2, axis=1)[:, :k], axis=1)
+
+
+class RobustAggregator:
+    """The per-topology robust hooks, built once by ``make_robust``."""
+
+    def __init__(self, rcfg: RobustConfig, *, num_learners: int,
+                 use_pallas: bool = False):
+        self.cfg = rcfg
+        self.num_learners = num_learners
+        self.use_pallas = use_pallas
+
+    # -- trimmed mean / median -----------------------------------------
+    @property
+    def aggregates(self) -> bool:
+        """Does the estimator replace the learner-stack mean (i.e. should
+        mean-based reducers get the ``aggregate`` hook)?"""
+        return self.cfg.estimator != "mean"
+
+    def trim_for(self, L: int) -> int:
+        if self.cfg.estimator == "median":
+            return kops.median_trim(L)
+        if self.cfg.estimator == "trimmed":
+            # an aggregation narrower than the config's width (e.g. the
+            # hierarchical outer level over G groups) clamps to a valid
+            # trim rather than failing — the groups' means are already
+            # robust, the outer trim is defense in depth
+            return min(self.cfg.trim, (L - 1) // 2)
+        return 0
+
+    def aggregate(self, stacked):
+        """Robust aggregate of a stacked (L, ...) pytree — the drop-in
+        replacement for ``tree_mean_axis0`` / per-leaf ``jnp.mean(axis=0)``
+        inside the reducers. f32 output, like the means it replaces."""
+        L = jax.tree.leaves(stacked)[0].shape[0]
+        return kops.robust_reduce_tree(
+            stacked, trim=self.trim_for(L), use_pallas=self.use_pallas
+        )
+
+    # -- norm clip + anomaly scores ------------------------------------
+    @property
+    def has_clip(self) -> bool:
+        return self.cfg.clip_mult > 0.0
+
+    def guard(self, delta, topo):
+        """Score + clip the (L, ...) displacement stack ``delta``.
+
+        Returns ``(scale, topo', metrics)`` where ``scale`` is the (L,)
+        f32 per-learner clip factor (1.0 = untouched; the caller applies
+        it with a ``where(scale < 1, ...)`` select so unclipped learners
+        stay bit-identical), ``topo'`` carries the advanced trailing-
+        median ring when clipping is on, and ``metrics`` holds the
+        ``robust_*`` scalars the Trainer repackages into ``robust``
+        records.
+        """
+        leaves = jax.tree.leaves(delta)
+        L = leaves[0].shape[0]
+        metrics = {}
+        sqsum = sum(
+            jnp.sum(jnp.square(x.astype(jnp.float32)),
+                    axis=tuple(range(1, x.ndim)))
+            for x in leaves
+        )
+        norms = jnp.sqrt(sqsum)  # (L,) per-learner displacement norms
+        scale = jnp.ones((L,), jnp.float32)
+        if self.has_clip:
+            ring = topo["robust_ring"]
+            count = topo["robust_count"]
+            W = self.cfg.clip_window
+            full = count >= W
+            budget = self.cfg.clip_mult * jnp.median(ring)
+            raw = jnp.minimum(1.0, budget / jnp.maximum(norms, _EPS))
+            scale = jnp.where(full, raw, 1.0)
+            ring = ring.at[count % W].set(jnp.median(norms))
+            topo = {**topo, "robust_ring": ring, "robust_count": count + 1}
+            metrics["robust_clipped_learners"] = jnp.sum(
+                (scale < 1.0).astype(jnp.float32)
+            )
+            metrics["robust_clip_budget"] = jnp.where(full, budget, 0.0)
+        if self.cfg.score:
+            scores = anomaly_scores(
+                delta, neighbors=self.cfg.score_neighbors
+            )
+            metrics["robust_anomaly_score"] = jnp.max(scores)
+            for j in range(L):
+                metrics[f"robust_score_{j}"] = scores[j]
+        metrics["robust_trim_fraction"] = jnp.float32(
+            2.0 * self.trim_for(self.num_learners) / self.num_learners
+        )
+        return scale, topo, metrics
+
+    def clip_anchored(self, learners, anchor, topo):
+        """Guard applied at the learner-weight level against an already
+        (L, ...)-shaped anchor stack (flat: broadcast w~; hierarchical:
+        each learner's group params): learners whose displacement from
+        their anchor exceeds the budget are pulled back to
+        ``anchor + scale * delta`` BEFORE the reducer runs, so the wire
+        compressor — and therefore the error-feedback residual — only
+        ever sees the clipped displacement (rejection, not deferral).
+        Unclipped learners pass through bit-identical.
+
+        Returns (learners', topo', metrics).
+        """
+        delta = jax.tree.map(
+            lambda w, a: w.astype(jnp.float32) - a.astype(jnp.float32),
+            learners, anchor,
+        )
+        scale, topo, metrics = self.guard(delta, topo)
+        if self.has_clip:
+            def clip_leaf(w, a, d):
+                s = scale.reshape((w.shape[0],) + (1,) * (w.ndim - 1))
+                clipped = (a.astype(jnp.float32) + d * s).astype(w.dtype)
+                return jnp.where(s < 1.0, clipped, w)
+
+            learners = jax.tree.map(clip_leaf, learners, anchor, delta)
+        return learners, topo, metrics
+
+    def clip_learners(self, learners, gp, topo):
+        """``clip_anchored`` against the shared meta params w~ (the flat
+        topology's anchor). Returns (learners', topo', metrics)."""
+        anchor = jax.tree.map(
+            lambda w, g: jnp.broadcast_to(
+                g[None], (w.shape[0],) + g.shape
+            ).astype(g.dtype),
+            learners, gp,
+        )
+        return self.clip_anchored(learners, anchor, topo)
+
+    def clip_stack(self, delta, topo):
+        """The gossip/async guard applied directly on an already-formed
+        (L, ...) displacement stack (gossip's ``w - x``, the async
+        server's anchor displacements): scales over-budget rows down,
+        leaves the rest bit-identical. Returns (delta', topo', metrics)."""
+        scale, topo, metrics = self.guard(delta, topo)
+        if self.has_clip:
+            def clip_leaf(d):
+                s = scale.reshape((d.shape[0],) + (1,) * (d.ndim - 1))
+                return jnp.where(s < 1.0, d.astype(jnp.float32) * s,
+                                 d.astype(jnp.float32))
+
+            delta = jax.tree.map(clip_leaf, delta)
+        return delta, topo, metrics
+
+
+def make_robust(cfg: MAvgConfig):
+    """RobustAggregator for ``cfg.robust``, or None when the subsystem is
+    off — the None keeps every existing code path object-identical."""
+    if cfg.robust is None:
+        return None
+    return RobustAggregator(
+        cfg.robust, num_learners=cfg.num_learners, use_pallas=cfg.use_pallas
+    )

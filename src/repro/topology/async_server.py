@@ -131,6 +131,7 @@ class AsyncServer(Topology):
 
     def __init__(self, cfg: MAvgConfig, reducer=None):
         from repro.comm import make_reducer
+        from repro.robust import make_robust
 
         self.cfg = cfg
         self.acfg = resolve_async_config(cfg)
@@ -139,7 +140,17 @@ class AsyncServer(Topology):
         self.alpha = (self.acfg.elastic_alpha
                       if self.acfg.elastic_alpha is not None
                       else cfg.elastic_alpha)
-        self.reducer = make_reducer(cfg) if reducer is None else reducer
+        # async robust semantics: the clip + anomaly scores bound each
+        # learner's anchor displacement every tick; the trimmed/median
+        # estimator applies only in the synchronous degenerate case (the
+        # FlatAllReduce delegate below), where an L-way mean exists
+        self.robust = make_robust(cfg)
+        agg = (
+            self.robust.aggregate
+            if self.robust is not None and self.robust.aggregates else None
+        )
+        self.reducer = (make_reducer(cfg, aggregate=agg)
+                        if reducer is None else reducer)
         self.profile = step_time_profile(cfg.num_learners, self.acfg)
         # de-phased start clocks: learner j first fires at tick
         # profile[j]-1 + (j mod profile[j]) — no center motion before the
@@ -219,12 +230,14 @@ class AsyncServer(Topology):
         cfg = self.cfg
         L = cfg.num_learners
         if self.degenerate:
-            gp2, v2, learners2, comm_residual, _, metrics = self._flat.mix(
-                learners, gp, v, comm_residual, None, step=step
+            # the async topo dict rides through the flat delegate so its
+            # robust clip ring (when on) advances and survives the rebuild
+            gp2, v2, learners2, comm_residual, topo2, metrics = self._flat.mix(
+                learners, gp, v, comm_residual, topo, step=step
             )
             u = topo["updates"] + 1
             topo = dict(
-                topo,
+                topo2,
                 clock=jnp.zeros((L,), jnp.int32),
                 pull_update=jnp.zeros((L,), jnp.int32) + u,
                 updates=u,
@@ -258,15 +271,22 @@ class AsyncServer(Topology):
             learners, gp,
         ))
 
+        rmetrics = {}
         if self.acfg.update == "mavg":
             # staleness-decayed block momentum on the mean of the ready
             # displacements (each measured against the center its learner
             # pulled): v <- mu v + eta * mean_ready(decay^tau (w_j - a_j))
-            d = jax.tree.map(
-                lambda w, a: (w.astype(jnp.float32) - a.astype(jnp.float32))
-                * expand(wgt, w),
+            delta = jax.tree.map(
+                lambda w, a: w.astype(jnp.float32) - a.astype(jnp.float32),
                 learners, topo["anchor"],
             )
+            if self.robust is not None:
+                # clip/score each learner's anchor displacement before the
+                # staleness weighting (non-fired learners carry weight 0,
+                # but their in-progress displacement still feeds the
+                # scores and the trailing-median ring)
+                delta, topo, rmetrics = self.robust.clip_stack(delta, topo)
+            d = jax.tree.map(lambda di: di * expand(wgt, di), delta)
             applied = jax.tree.map(
                 lambda di: di.sum(0) / jnp.maximum(n_fired, 1.0), d
             )
@@ -285,9 +305,12 @@ class AsyncServer(Topology):
             # decayed: v <- mu v + alpha * sum_ready(decay^tau (w_j - w~))
             force = jax.tree.map(
                 lambda w, g: (w.astype(jnp.float32)
-                              - g.astype(jnp.float32)[None]) * expand(wgt, w),
+                              - g.astype(jnp.float32)[None]),
                 learners, gp,
             )
+            if self.robust is not None:
+                force, topo, rmetrics = self.robust.clip_stack(force, topo)
+            force = jax.tree.map(lambda fi: fi * expand(wgt, fi), force)
             applied = jax.tree.map(lambda fi: fi.sum(0), force)
             v_new = jax.tree.map(
                 lambda vi, si: self.mu * vi + self.alpha * si, v, applied
@@ -357,4 +380,5 @@ class AsyncServer(Topology):
             "comm_bytes_dense": cb,
             "comm_compression": jnp.float32(1.0),
         }
+        metrics.update(rmetrics)
         return gp_new, v, learners, comm_residual, topo, metrics

@@ -154,16 +154,34 @@ class FlatAllReduce(Topology):
 
     def __init__(self, cfg: MAvgConfig, reducer=None):
         from repro.comm import make_reducer
+        from repro.robust import make_robust
 
         self.cfg = cfg
         self.mu = effective_momentum(cfg)
-        self.reducer = make_reducer(cfg) if reducer is None else reducer
+        self.robust = make_robust(cfg)
+        agg = (
+            self.robust.aggregate
+            if self.robust is not None and self.robust.aggregates else None
+        )
+        self.reducer = (
+            make_reducer(cfg, aggregate=agg) if reducer is None else reducer
+        )
 
     def init_buffers(self, gp, cfg: MAvgConfig):
         return self.reducer.init_residual(gp, cfg.num_learners), None
 
     def mix(self, learners, gp, v, comm_residual, topo, *, step):
         cfg = self.cfg
+        metrics = {}
+        if self.robust is not None:
+            # score + norm-clip the displacement stack BEFORE the reducer:
+            # the wire compressor (and so the EF residual) only ever sees
+            # the clipped displacement — clipped-away mass is rejected,
+            # not deferred (DESIGN.md §14)
+            learners, topo, rmetrics = self.robust.clip_learners(
+                learners, gp, topo
+            )
+            metrics.update(rmetrics)
         avg, comm_residual, comm_metrics = self.reducer.reduce(
             learners, gp, comm_residual, step=step
         )
@@ -192,10 +210,10 @@ class FlatAllReduce(Topology):
             learners = tree_broadcast_learners(
                 tree_cast(gp_new, learner_dtype(learners)), cfg.num_learners
             )
-        metrics = {
+        metrics.update({
             "v_norm": tree_norm(v),
             "displacement_norm": tree_norm(tree_sub(avg, gp)),
             "consensus_dist": consensus,
-        }
+        })
         metrics.update(comm_metrics)
         return gp_new, v, learners, comm_residual, topo, metrics

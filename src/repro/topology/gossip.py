@@ -217,12 +217,19 @@ class Gossip(Topology):
     name = "gossip"
 
     def __init__(self, cfg: MAvgConfig, reducer=None):
+        from repro.robust import make_robust
+
         t = cfg.topology
         self.cfg = cfg
         self.mu = effective_momentum(cfg)
         self.graph = t.graph
         self.momentum_tracking = t.momentum_tracking
         self.elastic = t.elastic
+        # gossip has no L-way mean to replace (the neighbor mix is a
+        # weighted exchange), so the robust influence bound here is the
+        # per-learner displacement clip + anomaly scoring; the trimmed/
+        # median estimator applies to the mean-based topologies
+        self.robust = make_robust(cfg)
         self.reducer = (
             reducer if reducer is not None
             else make_reducer_for(t.inner_comm or cfg.comm, cfg.meta_dtype)
@@ -288,6 +295,12 @@ class Gossip(Topology):
             lambda w, x: w.astype(jnp.float32) - x.astype(jnp.float32),
             learners, xp,
         )
+        rmetrics = {}
+        if self.robust is not None:
+            # clip each learner's displacement BEFORE compression: the
+            # neighbors (and the EF residual) only ever see the clipped
+            # payload — over-budget mass is rejected, not deferred
+            delta, topo, rmetrics = self.robust.clip_stack(delta, topo)
         c, residual, wire = compress_stack(
             self.reducer, delta, topo["residual"], step=step,
             learners=learners,
@@ -324,7 +337,14 @@ class Gossip(Topology):
             ))
         )
         membership = topo.get("membership")
-        topo = {"params": xp_new, "momentum": vL, "residual": residual}
+        # the clip ring (robust_ring/robust_count, already advanced by
+        # clip_stack above) must survive the rebuild or the jit carry
+        # structure breaks
+        carried = {
+            k: topo[k] for k in ("robust_ring", "robust_count") if k in topo
+        }
+        topo = {"params": xp_new, "momentum": vL, "residual": residual,
+                **carried}
         if membership is not None:
             topo["membership"] = membership  # the schedule rides unchanged
         # every learner ships its (compressed) displacement along each of
@@ -355,6 +375,7 @@ class Gossip(Topology):
                 jnp.float32(1.0),
             ),
         }
+        metrics.update(rmetrics)
         if mask is not None:
             metrics["present_count"] = jnp.sum(mask)
         return gp_new, v, learners, comm_residual, topo, metrics

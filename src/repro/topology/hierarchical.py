@@ -78,12 +78,23 @@ class Hierarchical(Topology):
             if t.group_k is not None
             else np.full((cfg.num_learners,), cfg.k_steps, np.int32)
         )
+        from repro.robust import make_robust
+
+        self.robust = make_robust(cfg)
+        # both levels get the robust estimator: the inner trim applies at
+        # group width S, the outer at G (trim_for clamps per width —
+        # defense in depth over already-robust group means)
+        agg = (
+            self.robust.aggregate
+            if self.robust is not None and self.robust.aggregates else None
+        )
         self.inner_reducer = (
             reducer if reducer is not None
-            else make_reducer_for(t.inner_comm or cfg.comm, cfg.meta_dtype)
+            else make_reducer_for(t.inner_comm or cfg.comm, cfg.meta_dtype,
+                                  aggregate=agg)
         )
         self.outer_reducer = make_reducer_for(
-            t.outer_comm or cfg.comm, cfg.meta_dtype
+            t.outer_comm or cfg.comm, cfg.meta_dtype, aggregate=agg
         )
 
     # ------------------------------------------------------------------
@@ -127,6 +138,16 @@ class Hierarchical(Topology):
         ldt = learner_dtype(learners)
         gparams = topo["group_params"]
         gmom = topo["group_momentum"]
+
+        rmetrics = {}
+        if self.robust is not None:
+            # score + clip each learner's displacement from its own
+            # group's params before the inner reducers run — the inner
+            # wire (and EF residual) only ever sees clipped payloads
+            anchor = jax.tree.map(lambda g: jnp.repeat(g, S, axis=0), gparams)
+            learners, topo, rmetrics = self.robust.clip_anchored(
+                learners, anchor, topo
+            )
 
         # ---- inner level: per-group average + block momentum (every K) --
         grouped = jax.tree.map(
@@ -270,11 +291,17 @@ class Hierarchical(Topology):
         )
 
         membership = topo.get("membership")
+        # the clip ring (advanced by clip_anchored above) must survive the
+        # rebuild or the jit carry structure breaks
+        carried = {
+            k: topo[k] for k in ("robust_ring", "robust_count") if k in topo
+        }
         topo = {
             "group_params": gparams,
             "group_momentum": gmom,
             "inner_residual": inner_res,
             "outer_residual": outer_res_new,
+            **carried,
         }
         if membership is not None:
             topo["membership"] = membership  # the schedule rides unchanged
@@ -305,6 +332,7 @@ class Hierarchical(Topology):
                 jnp.float32(1.0),
             ),
         }
+        metrics.update(rmetrics)
         if self.elastic is not None:
             metrics["present_count"] = jnp.sum(present_g)
         return gp_new, v_new, learners, comm_residual, topo, metrics

@@ -1,4 +1,4 @@
-from repro.utils.retry import retry_io
+from repro.utils.retry import backoff_schedule, retry_io
 from repro.utils.tree import (
     tree_zeros_like,
     tree_add,

@@ -7,11 +7,44 @@ container overlay — costs a few milliseconds of backoff instead of a
 dead run. It retries *transient* failure classes only and re-raises the
 last error when the budget is exhausted: a genuinely broken path fails
 loudly after ``attempts`` tries, never silently.
+
+Backoff jitter is *seeded and deterministic* — many learners retrying a
+shared filesystem in lock-step is exactly the thundering herd jitter
+exists to break, but a run's retry schedule must still replay bit-for-bit
+under the supervisor (every delay is a pure function of ``(seed, i)``,
+never of wall clock or global RNG state).
 """
 from __future__ import annotations
 
+import random
 import time
 from typing import Callable, Tuple, Type
+
+
+def backoff_schedule(
+    attempts: int,
+    *,
+    base_delay: float = 0.05,
+    factor: float = 2.0,
+    jitter: float = 0.0,
+    seed: int = 0,
+) -> list:
+    """The deterministic sleep schedule ``retry_io`` uses: one delay per
+    failed attempt that still has retries left (``attempts - 1`` entries).
+
+    Delay i is ``base_delay * factor**i * (1 + jitter * u_i)`` with
+    ``u_i`` drawn uniformly from [0, 1) by a ``random.Random(seed)``
+    private to this call — ``jitter=0`` (the default) reproduces the
+    plain exponential schedule exactly, and equal ``(seed, jitter)``
+    always yield equal schedules.
+    """
+    assert attempts >= 1, attempts
+    assert jitter >= 0.0, jitter
+    rng = random.Random(seed)
+    return [
+        base_delay * factor**i * (1.0 + jitter * rng.random())
+        for i in range(attempts - 1)
+    ]
 
 
 def retry_io(
@@ -20,21 +53,28 @@ def retry_io(
     attempts: int = 4,
     base_delay: float = 0.05,
     factor: float = 2.0,
+    jitter: float = 0.0,
+    seed: int = 0,
     retry_on: Tuple[Type[BaseException], ...] = (OSError,),
     sleep: Callable[[float], None] = time.sleep,
 ):
     """Call ``fn()``; on ``retry_on`` retry up to ``attempts`` times total,
-    sleeping ``base_delay * factor**i`` between tries. Returns ``fn()``'s
-    value; re-raises the final exception when every attempt failed.
+    sleeping per ``backoff_schedule`` between tries (seeded deterministic
+    jitter on the exponential backoff; ``jitter=0`` is the plain
+    schedule). Returns ``fn()``'s value; re-raises the final exception
+    when every attempt failed.
 
     ``sleep`` is injectable so tests (and latency-sensitive callers) can
     observe / suppress the backoff schedule.
     """
-    assert attempts >= 1, attempts
+    delays = backoff_schedule(
+        attempts, base_delay=base_delay, factor=factor, jitter=jitter,
+        seed=seed,
+    )
     for i in range(attempts):
         try:
             return fn()
         except retry_on:
             if i == attempts - 1:
                 raise
-            sleep(base_delay * factor**i)
+            sleep(delays[i])

@@ -511,3 +511,68 @@ def _flaky_write(self, real, s):
         self.fails -= 1
         raise OSError("EAGAIN")
     return real.write(s)
+
+
+def test_ch5_backoff_schedule_seeded_jitter():
+    """The jittered backoff schedule is a pure function of (seed, jitter):
+    replayable bit-for-bit, bounded by [base*f^i, base*f^i*(1+jitter)],
+    and jitter=0 (the default) IS the plain exponential schedule."""
+    from repro.utils import backoff_schedule
+
+    assert backoff_schedule(4) == [0.05, 0.05 * 2.0, 0.05 * 4.0]
+    a = backoff_schedule(5, jitter=0.5, seed=11)
+    assert a == backoff_schedule(5, jitter=0.5, seed=11)  # deterministic
+    assert a != backoff_schedule(5, jitter=0.5, seed=12)  # seed-keyed
+    assert a != backoff_schedule(5, jitter=0.0, seed=11)  # jitter is real
+    for i, d in enumerate(a):
+        base = 0.05 * 2.0 ** i
+        assert base <= d <= base * 1.5
+
+    calls = {"n": 0}
+    delays = []
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("transient")
+        return "ok"
+
+    # retry_io sleeps exactly the schedule's delays, in order
+    assert retry_io(flaky, jitter=0.5, seed=11, sleep=delays.append) == "ok"
+    assert delays == a[:2]
+
+
+def test_ch4_quarantine_hysteresis_extends_probation(tmp_path):
+    """``readmit_clean_windows=M`` stretches the probation window to
+    M x quarantine_steps — a flapping learner must stay clean for M
+    windows before readmission; M=1 is the old single-window behavior
+    (pinned by test_ch4_quarantine_masks_then_readmits)."""
+    mcfg = _mcfg(num_learners=4, topology=TopologyConfig(
+        kind="async", server=AsyncConfig(staleness=2)))
+    chaos = ChaosConfig(seed=0, horizon=8, faults=(
+        FaultSpec("crash", step=6, learner=3),
+    ))
+    tcfg = TrainConfig(
+        model=None, mavg=mcfg, batch_per_learner=B, meta_steps=8, seed=0,
+        chaos=chaos, obs=ObsConfig(sink="none"),
+    )
+    trainer = Trainer(
+        tcfg, mlp_loss,
+        init_params_fn=lambda rng: mlp_init(rng, D, 16, C),
+        batch_fn=classif_batch_fn(D, C, 4, K, B),
+    )
+    sup = Supervisor(lambda plan: trainer, target_steps=8,
+                     checkpoint_dir=None,
+                     policy=RecoveryPolicy(quarantine_steps=2,
+                                           readmit_clean_windows=2))
+    sup._quarantine(trainer, (1,), 2)
+    m = np.asarray(trainer.state.topo["membership"])
+    assert (m[2:6, 1] == 0.0).all()            # 2 x 2 probation rows
+    assert m[6, 1] == 1.0 and m[1, 1] == 1.0   # readmitted / untouched
+    assert (m.sum(axis=1) >= 1.0).all()
+    trainer.close()
+
+
+def test_ch4_readmit_clean_windows_validation():
+    with pytest.raises(AssertionError):
+        RecoveryPolicy(readmit_clean_windows=0)

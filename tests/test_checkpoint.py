@@ -277,3 +277,78 @@ def test_verified_chain_before_step(tmp_path):
 def test_prune_requires_positive_keep(tmp_path):
     with pytest.raises(AssertionError):
         prune_checkpoints(str(tmp_path), 0)
+
+
+def test_prune_deletes_sidecar_with_snapshot(tmp_path):
+    """A pruned snapshot takes its CRC sidecar with it — retention must
+    not strand ``.crc32.json`` files nothing will ever list again."""
+    state = _small_state()
+    for s in (1, 2, 3, 4):
+        save_state(str(tmp_path), state, s)
+    removed = prune_checkpoints(str(tmp_path), 2)
+    assert [os.path.basename(p) for p in removed] == [
+        "step_00000001.npz", "step_00000002.npz"]
+    left = sorted(os.listdir(str(tmp_path)))
+    assert not any(f.startswith("step_0000000" + str(s))
+                   for s in (1, 2) for f in left)
+    for s in (3, 4):
+        assert f"step_0000000{s}.npz" in left
+        assert f"step_0000000{s}.npz" + CRC_SUFFIX in left
+
+
+def test_prune_sweeps_orphaned_sidecars(tmp_path):
+    """A sidecar whose snapshot is gone (interrupted delete under the old
+    npz-first order, external cleanup) is swept by the next prune."""
+    state = _small_state()
+    for s in (1, 2):
+        save_state(str(tmp_path), state, s)
+    orphan = os.path.join(str(tmp_path), "step_00000099.npz" + CRC_SUFFIX)
+    with open(orphan, "w") as f:
+        f.write("{}")
+    assert prune_checkpoints(str(tmp_path), 2) == []  # nothing to prune...
+    assert not os.path.exists(orphan)                 # ...orphan swept anyway
+    for s in (1, 2):  # the live chain is untouched
+        assert os.path.exists(
+            os.path.join(str(tmp_path), f"step_0000000{s}.npz" + CRC_SUFFIX))
+
+
+def test_prune_interrupted_delete_sidecar_first_and_converges(
+        tmp_path, monkeypatch):
+    """Removal order is sidecar FIRST: an unlink interrupted between the
+    two deletes leaves a sidecar-less npz — a torn-save lookalike the
+    rollback scan skips and the next prune sweeps — never an orphaned
+    sidecar."""
+    import repro.checkpoint.npz as npz_mod
+
+    state = _small_state()
+    for s in (1, 2, 3):
+        save_state(str(tmp_path), state, s)
+    p3 = os.path.join(str(tmp_path), "step_00000003.npz")
+
+    calls = []
+    real_remove = os.remove
+
+    def interrupted_remove(p):
+        calls.append(os.path.basename(p))
+        if p.endswith(".npz"):
+            raise OSError("interrupted mid-prune")
+        return real_remove(p)
+
+    monkeypatch.setattr(npz_mod.os, "remove", interrupted_remove)
+    assert prune_checkpoints(str(tmp_path), 2) == []  # unlink failed
+    monkeypatch.setattr(npz_mod.os, "remove", real_remove)
+
+    # the sidecar went first, then the npz unlink was interrupted
+    assert calls == ["step_00000001.npz" + CRC_SUFFIX, "step_00000001.npz"]
+    leftover = os.path.join(str(tmp_path), "step_00000001.npz")
+    assert os.path.exists(leftover)
+    assert not os.path.exists(leftover + CRC_SUFFIX)
+    # the torn-save lookalike is invisible to rollback ...
+    assert latest_verified_checkpoint(str(tmp_path)) == p3
+    # ... and once the chain advances, the next prune sweeps it along
+    # with the then-stale step 2
+    save_state(str(tmp_path), state, 4)
+    removed = prune_checkpoints(str(tmp_path), 2)
+    assert [os.path.basename(p) for p in removed] == [
+        "step_00000001.npz", "step_00000002.npz"]
+    assert not os.path.exists(leftover)

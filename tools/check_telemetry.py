@@ -24,6 +24,9 @@ The stream contract (DESIGN.md §11, src/repro/obs/sink.py):
   across resume manifests (one run log = one monotone trajectory);
   alert/attribution records sit outside the trajectory (an alert repeats
   the step it fired on) and are field-checked but not ordered;
+* ``robust`` records (core/trainer.py + repro.robust, schema v4) carry
+  the per-mix clip/trim/anomaly-score telemetry; like alerts they sit
+  beside the step row of the same meta_step, outside the trajectory;
 * ``fault`` / ``recovery`` records (core/supervisor.py, schema v3) mark
   supervised auto-recovery transitions. A ``recovery`` record RESETS the
   monotonicity tracker: it documents a legitimate rollback of the
@@ -49,7 +52,7 @@ DEFAULT_SCHEMA = os.path.join(
 )
 
 KINDS = ("manifest", "step", "row", "alert", "attribution", "fault",
-         "recovery")
+         "recovery", "robust")
 
 
 def load_schema(path: str) -> dict:
@@ -83,6 +86,7 @@ def check_stream(lines, schema, *, name: str = "<stream>") -> list[str]:
     attr_req = set(schema.get("attribution_required", ()))
     fault_req = set(schema.get("fault_required", ()))
     recovery_req = set(schema.get("recovery_required", ()))
+    robust_req = set(schema.get("robust_required", ()))
     known_majors = {
         _major(v) for v in schema.get(
             "known_versions", [schema["schema_version"]]
@@ -189,6 +193,17 @@ def check_stream(lines, schema, *, name: str = "<stream>") -> list[str]:
             # the supervisor rolled the run back to a verified snapshot:
             # the trajectory legitimately rewinds here
             last_step = None
+        elif kind == "robust":
+            # schema v4: per-mix robust-aggregation telemetry (repro.robust)
+            # — sits beside the step row of the same meta_step, outside the
+            # monotone trajectory (like alerts, it repeats a step's index)
+            if n_manifests == 0:
+                errs.append(f"{where}: robust record before any manifest")
+            missing = robust_req - set(rec)
+            if missing:
+                errs.append(
+                    f"{where}: robust missing fields {sorted(missing)}"
+                )
         # kind == "row": bench rows are suite-specific, not field-checked
     if n_manifests == 0:
         errs.append(f"{name}: no manifest record in stream")
